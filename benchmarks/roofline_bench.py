@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+One row per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, and the useful-FLOPs ratio (MODEL_FLOPS / HLO_FLOPs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_results(pattern: str = "*.json") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def bench_roofline() -> List[tuple]:
+    rows = []
+    for r in load_results():
+        rf = r["roofline"]
+        tag = r.get("mode", r["shape"])
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        useful = r.get("model", {}).get("useful_flops_ratio") or 0
+        rows.append((name, rf["bound_s"] * 1e6,
+                     f"{rf['dominant']}|useful={useful:.3f}"))
+    return rows
+
+
+def summary_table() -> str:
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s "
+             "| dominant | useful |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in load_results():
+        rf = r["roofline"]
+        useful = r.get("model", {}).get("useful_flops_ratio") or 0
+        lines.append(
+            f"| {r['arch']} | {r.get('mode', '')}:{r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {useful:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary_table())

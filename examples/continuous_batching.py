@@ -1,0 +1,36 @@
+"""Continuous-batching serving demo: 6 mixed-length requests through a
+3-slot engine (vLLM-style slot reuse, per-slot cache positions).
+
+    PYTHONPATH=src python examples/continuous_batching.py --arch granite-8b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models.transformer import build_model
+from repro.serving import BatchedServer, Request
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-8b")
+ap.add_argument("--slots", type=int, default=3)
+args = ap.parse_args()
+
+cfg = get_arch(args.arch).reduced()
+model = build_model(cfg, max_seq=96)
+params = model.init(jax.random.PRNGKey(0))
+server = BatchedServer(model, params, max_batch=args.slots, max_len=96)
+
+for i, plen in enumerate([5, 11, 8, 17, 6, 9]):
+    server.submit(Request(
+        uid=i, prompt=jax.random.randint(jax.random.PRNGKey(i), (plen,),
+                                         0, cfg.vocab_size),
+        max_new_tokens=8))
+
+t0 = time.perf_counter()
+stats = server.run()
+dt = time.perf_counter() - t0
+print(f"{cfg.name} reduced | {args.slots} slots | stats={stats} "
+      f"| {dt:.1f}s total")

@@ -1,0 +1,69 @@
+"""Pytree checkpointing to .npz (no orbax dependency).
+
+Leaves are flattened to ``path -> array`` entries; the treedef is
+reconstructed from the target template on restore, so sharded train
+states round-trip as long as the caller re-applies device placement.
+Writes are atomic (tmp file + rename) and a ``latest`` pointer tracks
+the newest step.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten(tree))
+    os.replace(tmp, path)
+    with open(os.path.join(ckpt_dir, "latest"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    marker = os.path.join(ckpt_dir, "latest")
+    if os.path.exists(marker):
+        with open(marker) as f:
+            return int(f.read().strip())
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", fn))] \
+        if os.path.isdir(ckpt_dir) else []
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any,
+                       step: Optional[int] = None) -> Any:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_p:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: the FedBWO communication-efficient
+FL protocol (score-only uplink + best-client weight fetch) and its
+FedAvg/FedPSO/FedGWO/FedSCA baselines."""
+from repro.core.client import ClientHP, Task, make_client_update
+from repro.core.comm import (CommMeter, fedavg_total, fedx_total,
+                             normalized_cost, SCORE_BYTES)
+from repro.core.protocol import RoundLog, StopConditions, run_federated
+from repro.core.server import Server, Strategy, get_strategy
+
+__all__ = ["ClientHP", "Task", "make_client_update", "CommMeter",
+           "fedavg_total", "fedx_total", "normalized_cost", "SCORE_BYTES",
+           "RoundLog", "StopConditions", "run_federated", "Server",
+           "Strategy", "get_strategy"]

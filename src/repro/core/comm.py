@@ -1,0 +1,69 @@
+"""Communication-cost accounting (paper §IV-D, Eqs. 1-4).
+
+FedAvg uplink per round:  C * N * M          (Eq. 1 over T rounds)
+FedX   uplink per round:  N * 4 + M + eps    (Eq. 2; eps = server request,
+                                              0 on TPU program order)
+Normalized FedX cost (C=1, fixed N=10):  T_X / (T_Avg * 10)   (Eq. 4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+SCORE_BYTES = 4  # one fp32 performance score — the paper's headline number
+
+
+def fedavg_round_bytes(c: float, n_clients: int, model_bytes: int) -> int:
+    return int(max(c * n_clients, 1)) * model_bytes
+
+
+def fedx_round_bytes(n_clients: int, model_bytes: int, eps: int = 0) -> int:
+    return n_clients * SCORE_BYTES + model_bytes + eps
+
+
+def fedavg_total(t_rounds: int, c: float, n: int, m: int) -> int:
+    return t_rounds * fedavg_round_bytes(c, n, m)                 # Eq. 1
+
+
+def fedx_total(t_rounds: int, n: int, m: int, eps: int = 0) -> int:
+    return t_rounds * fedx_round_bytes(n, m, eps)                 # Eq. 2
+
+
+def normalized_cost(t_x: int, n: int, m: int, t_avg: int, c: float = 1.0,
+                    eps: int = 0) -> float:
+    """Eq. 3; with the paper's simplification it reduces to Eq. 4."""
+    return fedx_total(t_x, n, m, eps) / max(1, fedavg_total(t_avg, c, n, m))
+
+
+@dataclasses.dataclass
+class CommMeter:
+    """Per-round byte accounting for a running FL experiment."""
+    model_bytes: int
+    n_clients: int
+    uplink: List[int] = dataclasses.field(default_factory=list)
+    downlink: List[int] = dataclasses.field(default_factory=list)
+
+    def record_fedavg_round(self, n_participants: int):
+        self.uplink.append(n_participants * self.model_bytes)
+        self.downlink.append(n_participants * self.model_bytes)
+
+    def record_fedx_round(self, fetched_model: bool = True):
+        up = self.n_clients * SCORE_BYTES
+        if fetched_model:
+            up += self.model_bytes
+        self.uplink.append(up)
+        self.downlink.append(self.n_clients * self.model_bytes)
+
+    @property
+    def total_uplink(self) -> int:
+        return sum(self.uplink)
+
+    @property
+    def total(self) -> int:
+        return sum(self.uplink) + sum(self.downlink)
+
+    def summary(self) -> Dict[str, float]:
+        return {"rounds": len(self.uplink),
+                "uplink_bytes": self.total_uplink,
+                "total_bytes": self.total,
+                "model_bytes": self.model_bytes}

@@ -1,0 +1,84 @@
+"""Distributed FL rounds as shard_map collective schedules.
+
+This is the paper's insight expressed on a TPU mesh: clients map to
+slices of the ``clients`` (or ``pod``) axis, local training runs with
+**zero collectives**, and the per-round cross-slice traffic is
+
+  FedX:   all_gather of one fp32 score per client  (N x 4 bytes)
+          + one masked-psum to fetch the winner's weights (M bytes)
+  FedAvg: a full-model weighted all-reduce every round (M bytes * N)
+
+JAX has no dynamic-source broadcast, so the winner fetch is
+``psum(where(my_id == winner, w, 0))`` — physically an all-reduce of M
+bytes, logically the paper's single model transfer (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.client import ClientHP, Task, make_client_update
+from repro.metaheuristics import Metaheuristic
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def make_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
+                    mesh: Mesh, axis: str = "clients"):
+    """Returns jit'd ``round_fn(global_params, client_data, rng_keys) ->
+    (new_global_params, scores)``.
+
+    client_data: pytree with leading (N, ...) dims, sharded over ``axis``.
+    rng_keys:    (N, 2) uint32, sharded over ``axis``.
+    """
+    client_update = make_client_update(task, hp, mh)
+
+    def per_shard(params, data, keys):
+        data = _squeeze0(data)
+        rng = jax.random.wrap_key_data(keys[0], impl="threefry2x32")
+        score, new_params = client_update(params, data, rng)
+        scores = jax.lax.all_gather(score, axis)            # N x 4 bytes
+        winner = jnp.argmin(scores)
+        me = jax.lax.axis_index(axis)
+        mask = (me == winner).astype(jnp.float32)
+        flat, unravel = ravel_pytree(new_params)
+        best = jax.lax.psum(flat * mask, axis)              # winner fetch
+        return unravel(best), scores
+
+    fn = shard_map(per_shard, mesh=mesh,
+                   in_specs=(P(), P(axis), P(axis)),
+                   out_specs=(P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def make_fedavg_round(task: Task, hp: ClientHP, mesh: Mesh,
+                      axis: str = "clients"):
+    """Synchronous FedAvg: every round all-reduces the full model."""
+    client_update = make_client_update(task, hp, mh=None)
+
+    def per_shard(params, data, keys):
+        data = _squeeze0(data)
+        rng = jax.random.wrap_key_data(keys[0], impl="threefry2x32")
+        score, new_params = client_update(params, data, rng)
+        n = jax.lax.psum(1.0, axis)
+        avg = jax.tree.map(
+            lambda w: jax.lax.psum(w.astype(jnp.float32), axis) / n,
+            new_params)                                     # M bytes x N
+        scores = jax.lax.all_gather(score, axis)
+        return jax.tree.map(lambda a, ref: a.astype(ref.dtype),
+                            avg, new_params), scores
+
+    fn = shard_map(per_shard, mesh=mesh,
+                   in_specs=(P(), P(axis), P(axis)),
+                   out_specs=(P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)

@@ -1,0 +1,52 @@
+"""Federated training driver with the paper's stopping conditions (§IV-D):
+
+1. no significant improvement for ``t`` consecutive rounds,
+2. accuracy above threshold ``tau``,
+3. round limit reached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.server import Server
+
+
+@dataclasses.dataclass
+class StopConditions:
+    max_rounds: int = 30          # paper: 30 global epochs
+    patience: int = 5             # paper: t = 5
+    tau: float = 0.70             # paper: tau = 70%
+    min_delta: float = 1e-3
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    test_loss: float
+    test_acc: float
+    wall_time_s: float
+    info: Dict[str, Any]
+
+
+def run_federated(server: Server, eval_data, stop: StopConditions,
+                  verbose: bool = False) -> List[RoundLog]:
+    logs: List[RoundLog] = []
+    best_acc, stale = -1.0, 0
+    for rnd in range(stop.max_rounds):
+        t0 = time.perf_counter()
+        info = server.run_round()
+        loss, acc = server.evaluate(eval_data)
+        dt = time.perf_counter() - t0
+        logs.append(RoundLog(rnd, loss, acc, dt, info))
+        if verbose:
+            print(f"  round {rnd:3d}  loss={loss:.4f} acc={acc:.4f} "
+                  f"({dt:.2f}s) {info if rnd < 2 else ''}")
+        if acc > best_acc + stop.min_delta:
+            best_acc, stale = acc, 0
+        else:
+            stale += 1
+        if acc >= stop.tau or stale >= stop.patience:
+            break
+    return logs

@@ -1,0 +1,98 @@
+"""FL server: strategy definitions and aggregation (paper Algorithms 2/3).
+
+``FedAvg``  — clients upload weights; server averages (Alg. 2).
+``FedX``    — clients upload a 4-byte score; server fetches the best
+              client's weights and adopts them as the global model
+              (Alg. 3: ServerRun + GetBestModel).  X ∈ {BWO, PSO, GWO,
+              SCA} only changes the client-side meta-heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import ClientHP, Task, make_client_update
+from repro.core.comm import CommMeter
+from repro.metaheuristics import REGISTRY, Metaheuristic
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str                         # fedavg | fedbwo | fedpso | fedgwo | fedsca
+    mh: Optional[Metaheuristic]       # None => FedAvg
+    client_ratio: float = 1.0         # C (FedAvg participation ratio)
+
+    @property
+    def is_fedx(self) -> bool:
+        return self.mh is not None
+
+
+def get_strategy(name: str, client_ratio: float = 1.0, **mh_kw) -> Strategy:
+    name = name.lower()
+    if name == "fedavg":
+        return Strategy("fedavg", None, client_ratio)
+    if name.startswith("fed") and name[3:] in REGISTRY:
+        return Strategy(name, REGISTRY[name[3:]](**mh_kw), 1.0)
+    raise KeyError(f"unknown strategy {name!r}")
+
+
+class Server:
+    """Orchestrates FL rounds over in-process simulated clients."""
+
+    def __init__(self, task: Task, strategy: Strategy, hp: ClientHP,
+                 client_data: Sequence[Any], rng: jax.Array,
+                 model_bytes: Optional[int] = None):
+        self.task = task
+        self.strategy = strategy
+        self.hp = hp
+        self.client_data = list(client_data)
+        self.n_clients = len(client_data)
+        rng, pkey = jax.random.split(rng)
+        self.rng = rng
+        self.global_params = task.init_params(pkey)
+        if model_bytes is None:
+            model_bytes = sum(l.size * l.dtype.itemsize
+                              for l in jax.tree.leaves(self.global_params))
+        self.meter = CommMeter(model_bytes=model_bytes,
+                               n_clients=self.n_clients)
+        self._update = jax.jit(make_client_update(task, hp, strategy.mh))
+
+    # ------------------------------------------------------------ round --
+    def run_round(self) -> dict:
+        self.rng, sel_key, *ckeys = jax.random.split(self.rng,
+                                                     self.n_clients + 2)
+        if self.strategy.is_fedx:
+            # every client trains + refines, uploads only its score
+            scores, params_list = [], []
+            for k in range(self.n_clients):
+                score, params = self._update(self.global_params,
+                                             self.client_data[k], ckeys[k])
+                scores.append(score)
+                params_list.append(params)
+            scores = jnp.stack(scores)
+            best = int(jnp.argmin(scores))
+            # GetBestModel: one full-model transfer from the winner only
+            self.global_params = params_list[best]
+            self.meter.record_fedx_round(fetched_model=True)
+            return {"best_client": best, "score": float(scores[best]),
+                    "scores": [float(s) for s in scores]}
+        # ---- FedAvg ----
+        m = max(int(self.strategy.client_ratio * self.n_clients), 1)
+        sel = jax.random.choice(sel_key, self.n_clients, (m,), replace=False)
+        new_params = []
+        for k in sel.tolist():
+            _, params = self._update(self.global_params,
+                                     self.client_data[k], ckeys[k])
+            new_params.append(params)
+        self.global_params = jax.tree.map(
+            lambda *xs: jnp.mean(jnp.stack(xs), 0), *new_params)
+        self.meter.record_fedavg_round(m)
+        return {"participants": sel.tolist()}
+
+    # ------------------------------------------------------------- eval --
+    def evaluate(self, eval_data) -> Tuple[float, float]:
+        loss, acc = jax.jit(self.task.loss_fn)(self.global_params, eval_data)
+        return float(loss), float(acc)

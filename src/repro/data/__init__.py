@@ -1,0 +1,8 @@
+from repro.data.synthetic import (make_cifar_like, make_token_dataset,
+                                  cnn_task)
+from repro.data.partition import partition_iid, partition_dirichlet
+from repro.data.loader import batch_dataset, client_batches
+
+__all__ = ["make_cifar_like", "make_token_dataset", "cnn_task",
+           "partition_iid", "partition_dirichlet", "batch_dataset",
+           "client_batches"]

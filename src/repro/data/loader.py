@@ -1,0 +1,18 @@
+"""Batching helpers: stack a client's dataset into (n_batches, B, ...)
+arrays so the whole local-training epoch is one ``lax.scan``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_dataset(dataset: dict, batch_size: int) -> dict:
+    n = len(jax.tree.leaves(dataset)[0])
+    nb = n // batch_size
+    return jax.tree.map(
+        lambda a: a[:nb * batch_size].reshape(nb, batch_size, *a.shape[1:]),
+        dataset)
+
+
+def client_batches(client_data_list, batch_size: int):
+    return [batch_dataset(d, batch_size) for d in client_data_list]

@@ -1,0 +1,88 @@
+"""Synthetic datasets (the container is offline — no CIFAR-10 download).
+
+``make_cifar_like`` builds a *learnable* 10-class 32x32x3 image problem:
+each class has a random smooth template; samples are the template plus
+pixel noise and random brightness/shift augmentation.  A CNN that learns
+real features separates the classes; a broken optimizer does not — which
+is exactly the discriminative power the FL reproduction needs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.client import Task
+from repro.models import cnn as cnn_lib
+
+
+def _smooth(rng, shape, passes: int = 3):
+    x = jax.random.normal(rng, shape)
+    for _ in range(passes):
+        x = (x + jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0)
+             + jnp.roll(x, 1, 1) + jnp.roll(x, -1, 1)) / 5.0
+    return x
+
+
+def make_cifar_like(rng, n_train: int = 10000, n_test: int = 2000,
+                    num_classes: int = 10, image_size: int = 32,
+                    noise: float = 0.35) -> Tuple[dict, dict]:
+    """Returns (train, test) dicts of images (N,32,32,3) fp32 / labels."""
+    rt, rl, rn, rlt, rnt, rb = jax.random.split(rng, 6)
+    templates = jax.vmap(
+        lambda k: _smooth(k, (image_size, image_size, 3)))(
+            jax.random.split(rt, num_classes))
+    templates = templates / (jnp.std(templates, axis=(1, 2, 3),
+                                     keepdims=True) + 1e-6)
+
+    def build(rng_lbl, rng_noise, n):
+        labels = jax.random.randint(rng_lbl, (n,), 0, num_classes)
+        base = templates[labels]
+        k1, k2 = jax.random.split(rng_noise)
+        imgs = base + noise * jax.random.normal(k1, base.shape)
+        bright = 1.0 + 0.1 * jax.random.normal(k2, (n, 1, 1, 1))
+        return {"images": (imgs * bright).astype(jnp.float32),
+                "labels": labels.astype(jnp.int32)}
+
+    return build(rl, rn, n_train), build(rlt, rnt, n_test)
+
+
+def cnn_task(cfg: CNNConfig = CNNConfig()) -> Task:
+    def init_params(rng):
+        return cnn_lib.cnn_init(rng, cfg)
+
+    def loss_fn(params, batch):
+        rng = batch.get("rng") if isinstance(batch, dict) else None
+        return cnn_lib.cnn_loss(params, batch["images"], batch["labels"],
+                                train=rng is not None, dropout_rng=rng)
+
+    return Task(init_params, loss_fn)
+
+
+def make_token_dataset(rng, n_seqs: int, seq_len: int, vocab: int,
+                       order: int = 2):
+    """Synthetic Markov token streams (learnable LM data for examples)."""
+    rk, rs = jax.random.split(rng)
+    # sparse transition preference: each context prefers a few tokens
+    pref = jax.random.randint(rk, (vocab,), 0, vocab)
+
+    def gen_seq(key):
+        def step(tok, k):
+            knext, kchoice = jax.random.split(k)
+            greedy = pref[tok]
+            rand = jax.random.randint(kchoice, (), 0, vocab)
+            nxt = jnp.where(jax.random.uniform(knext) < 0.7, greedy, rand)
+            return nxt, nxt
+
+        k0, kseq = jax.random.split(key)
+        t0 = jax.random.randint(k0, (), 0, vocab)
+        _, toks = jax.lax.scan(step, t0, jax.random.split(kseq, seq_len))
+        return toks
+
+    toks = jax.vmap(gen_seq)(jax.random.split(rs, n_seqs))
+    return {"tokens": toks.astype(jnp.int32),
+            "labels": jnp.concatenate(
+                [toks[:, 1:], jnp.full((n_seqs, 1), -1, toks.dtype)],
+                axis=1).astype(jnp.int32)}

@@ -1,0 +1,4 @@
+from repro.kernels.bwo_evolve.ops import bwo_evolve
+from repro.kernels.bwo_evolve import ref
+
+__all__ = ["bwo_evolve", "ref"]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused BWO mutation + procreation.
+
+One pass over VMEM produces a child row block from two *dynamically
+indexed* parent row blocks (scalar-prefetched ``p1_idx``/``p2_idx`` drive
+the BlockSpec index maps — TPU's analogue of the gather the GPU version
+does through shared memory), plus on-the-fly RNG decode from prefetched
+random bits.  Fusing mutate+crossover avoids materializing the mutated
+population and three (P, D) temporaries in HBM: HBM traffic drops from
+~7 x P x D x 4B (separate HLO ops) to ~4 x P x D x 4B (read p1, p2,
+bits1, bits2; write child).
+
+Block layout: child rows are processed one at a time ((1, db) blocks,
+db a multiple of 128 lanes) because each row gathers different parents.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(p1_idx_ref, p2_idx_ref, p1_ref, p2_ref, bits1_ref, bits2_ref,
+            gate_ref, out_ref, *, pm_gene: float, mut_scale: float):
+    p1 = p1_ref[...]
+    p2 = p2_ref[...]
+    bits1 = bits1_ref[...]
+    bits2 = bits2_ref[...]
+    gate = gate_ref[0, 0]
+
+    thresh = jnp.uint32(int(pm_gene * 256))
+    mask = ((bits2 & jnp.uint32(0xFF)) < thresh).astype(p1.dtype)
+    u_noise = (((bits2 >> jnp.uint32(8)) & jnp.uint32(0xFFFFFF))
+               .astype(jnp.float32) * (1.0 / float(1 << 24)))
+    noise = (2.0 * u_noise - 1.0) * mut_scale * (jnp.abs(p1) + 1e-3)
+    p1m = p1 + noise.astype(p1.dtype) * mask * gate
+    alpha = (bits1.astype(jnp.float32) * (1.0 / 4294967296.0)).astype(p1.dtype)
+    out_ref[...] = alpha * p1m + (1.0 - alpha) * p2
+
+
+def bwo_evolve_pallas(pop, p1_idx, p2_idx, bits1, bits2, row_gate, *,
+                      pm_gene: float, mut_scale: float,
+                      block_d: int = 512, interpret: bool = False):
+    """pop (P, D) fp32 with D % 128 == 0 (caller pads)."""
+    P, D = pop.shape
+    block_d = min(block_d, D)
+    while D % block_d:                 # D is 128-aligned; find a divisor
+        block_d -= 128
+    assert D % block_d == 0 and block_d % 128 == 0, (D, block_d)
+    grid = (P, D // block_d)
+
+    kernel = functools.partial(_kernel, pm_gene=pm_gene,
+                               mut_scale=mut_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j, i1, i2: (i1[i], j)),
+            pl.BlockSpec((1, block_d), lambda i, j, i1, i2: (i2[i], j)),
+            pl.BlockSpec((1, block_d), lambda i, j, i1, i2: (i, j)),
+            pl.BlockSpec((1, block_d), lambda i, j, i1, i2: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, i1, i2: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, i1, i2: (i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, D), pop.dtype),
+        interpret=interpret,
+    )(p1_idx, p2_idx, pop, pop, bits1, bits2, row_gate)

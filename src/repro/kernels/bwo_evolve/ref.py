@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused BWO generation update.
+
+Semantics (one generation, paper §III-C order mutation -> procreation):
+
+  for each child row i:
+    p1 = pop[p1_idx[i]]                     # fitter parent (pre-ranked)
+    p2 = pop[p2_idx[i]]
+    mask_i  = (bits2 & 0xff) < pm_gene*256          # sparse gene mask
+    u_noise = ((bits2 >> 8) & 0xffffff) / 2^24      # uniform in [0,1)
+    noise   = (2*u_noise - 1) * mut_scale * (|p1| + 1e-3)
+    p1m     = p1 + noise * mask_i * row_gate[i]     # 1. mutation
+    alpha   = bits1 / 2^32
+    child_i = alpha * p1m + (1 - alpha) * p2        # 2. procreation
+
+Cannibalism (selection) happens outside on child fitness.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bwo_evolve_ref(pop, p1_idx, p2_idx, bits1, bits2, row_gate, *,
+                   pm_gene: float, mut_scale: float):
+    """pop (P,D) f32; idx (P,) i32; bits (P,D) uint32; row_gate (P,1) f32."""
+    p1 = pop[p1_idx]
+    p2 = pop[p2_idx]
+    thresh = jnp.uint32(int(pm_gene * 256))
+    mask = ((bits2 & jnp.uint32(0xFF)) < thresh).astype(pop.dtype)
+    u_noise = (((bits2 >> jnp.uint32(8)) & jnp.uint32(0xFFFFFF))
+               .astype(jnp.float32) * (1.0 / float(1 << 24)))
+    noise = (2.0 * u_noise - 1.0) * mut_scale * (jnp.abs(p1) + 1e-3)
+    p1m = p1 + noise.astype(pop.dtype) * mask * row_gate
+    alpha = bits1.astype(jnp.float32) * (1.0 / 4294967296.0)
+    alpha = alpha.astype(pop.dtype)
+    return alpha * p1m + (1.0 - alpha) * p2

@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+Classic online-softmax blocking adapted to the TPU memory hierarchy:
+the grid is (B, H, nq, nk) with the kv dim innermost — TPU grids execute
+sequentially over the last axis, so the (bq, hd) accumulator, row-max and
+row-sum live in VMEM scratch across kv steps and spill to HBM exactly
+once per q block.  K/V BlockSpecs index the *shared* KV head (h // rep),
+so GQA never materializes repeated K/V in HBM — the MXU reads each KV
+block once per query-head group.
+
+Block sizes default to (bq, bk) = (512, 512) with hd padded to a
+multiple of 128 lanes by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            q_offset: int, seq_k: int, bq: int, bk: int, nk: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...][:, :1]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                              # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    l_new = l_scr[...][:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...][:, :1], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None, q_offset: int = 0,
+                           seq_k: Optional[int] = None,
+                           bq: int = 512, bk: int = 512,
+                           scale: Optional[float] = None,
+                           interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd); hd % 128 == 0."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0 and hd % LANES == 0
+    nq, nk = Sq // bq, Sk // bk
+    seq_k = Sk if seq_k is None else seq_k
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, seq_k=seq_k, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""jit'd wrapper: layout conversion, lane padding, block-size selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas, LANES)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    bq: int = 512, bk: int = 512,
+                    interpret: Optional[bool] = None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    hp = -(-hd // LANES) * LANES
+    bq_ = min(bq, Sq)
+    bk_ = min(bk, Sk)
+    sq_pad = -(-Sq // bq_) * bq_ - Sq
+    sk_pad = -(-Sk // bk_) * bk_ - Sk
+
+    def padq(t):
+        return jnp.pad(t, ((0, 0), (0, sq_pad), (0, 0), (0, hp - hd)))
+
+    def padk(t):
+        return jnp.pad(t, ((0, 0), (0, sk_pad), (0, 0), (0, hp - hd)))
+
+    qt = padq(q).transpose(0, 2, 1, 3)
+    kt = padk(k).transpose(0, 2, 1, 3)
+    vt = padk(v).transpose(0, 2, 1, 3)
+    # zero-padded hd lanes contribute 0 to q.k; pass the true scale
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, scale=hd ** -0.5,
+        q_offset=q_offset, seq_k=Sk, bq=bq_, bk=bk_, interpret=interpret)
+    out = out.transpose(0, 2, 1, 3)[:, :Sq, :, :hd]
+    return out

@@ -1,0 +1,4 @@
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan import ref
+
+__all__ = ["ssm_scan", "ref"]

@@ -1,0 +1,33 @@
+"""jit'd wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def ssm_scan(x, dt, A, Bc, Cc, h0=None, *, chunk: int = 64,
+             block_d: int = 256, interpret: Optional[bool] = None):
+    """Selective-SSM scan.  Returns (y (B,S,D) f32, h_final (B,D,N) f32)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, D = x.shape
+    block_d = min(block_d, D)
+    while D % block_d:
+        block_d //= 2
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    return ssm_scan_pallas(x.astype(jnp.float32), dt.astype(jnp.float32),
+                           A.astype(jnp.float32), Bc.astype(jnp.float32),
+                           Cc.astype(jnp.float32), h0, chunk=chunk,
+                           block_d=block_d, interpret=interpret)

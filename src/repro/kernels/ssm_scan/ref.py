@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the selective-SSM scan.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+    y_t = (h_t C_t).sum(N)
+
+x/dt: (B, S, D);  Bc/Cc: (B, S, N);  A: (D, N);  h0: (B, D, N) or None.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, A, Bc, Cc, h0=None):
+    B, S, D = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,D),(B,D),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None] * A)            # (B,D,N)
+        h = h * da + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bc.transpose(1, 0, 2).astype(jnp.float32),
+          Cc.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: chunked selective-SSM scan (Mamba recurrence).
+
+TPU adaptation of the CUDA selective-scan: instead of one thread-block
+per channel doing a warp-level scan, the grid is
+``(B, D/block_d, S/chunk)`` with the **chunk axis innermost** — TPU grid
+steps on the last axis run sequentially, so the (block_d, N) hidden
+state lives in VMEM scratch across chunk steps and never round-trips to
+HBM.  Within a chunk the recurrence runs as an unrolled-in-VMEM
+``fori_loop`` of (block_d, N) VPU ops; x/dt/B/C stream in as
+(1, chunk, block_d) / (1, chunk, N) VMEM blocks.
+
+The channel dim maps to sublanes and N to lanes, so each step is a
+(block_d, N) elementwise FMA plus an N-lane reduction — the layout the
+VPU wants.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+            h_scr, *, chunk: int, nc: int, has_h0: bool):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        if has_h0:
+            h_scr[...] = h0_ref[0].astype(jnp.float32)
+        else:
+            h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = a_ref[...].astype(jnp.float32)                  # (db, N)
+
+    def step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)         # (db,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)       # (db,)
+        bt = b_ref[0, t, :].astype(jnp.float32)         # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)         # (N,)
+        da = jnp.exp(dtt[:, None] * A)                  # (db, N)
+        h = h * da + (dtt * xt)[:, None] * bt[None, :]
+        y_ref[0, t, :] = jnp.sum(h * ct[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ic == nc - 1)
+    def _flush():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def ssm_scan_pallas(x, dt, A, Bc, Cc, h0=None, *, chunk: int = 64,
+                    block_d: int = 256, interpret: bool = False):
+    """x/dt: (B,S,D); A: (D,N); Bc/Cc: (B,S,N) -> (y (B,S,D), h (B,D,N))."""
+    B, S, D = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, D)
+    assert S % chunk == 0 and D % block_d == 0
+    nc, nd = S // chunk, D // block_d
+    has_h0 = h0 is not None
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=chunk, nc=nc, has_h0=has_h0)
+    grid = (B, nd, nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bc, Cc, h0)

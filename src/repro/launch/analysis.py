@@ -1,0 +1,42 @@
+"""Roofline terms from compiled-artifact analysis.
+
+    compute    = HLO_dot_FLOPs / (chips * peak_FLOPs)
+    memory     = HBM_bytes     / (chips * HBM_bw)
+    collective = link_bytes    / (chips * link_bw)
+
+FLOPs / bytes / collective-bytes come from the loop-corrected mini HLO
+cost model in :mod:`repro.launch.hlo_analysis` (XLA's own
+``cost_analysis`` counts while bodies once, under-counting scanned-layer
+models by the layer count — both figures are recorded in the dry-run
+JSON so the correction is auditable).
+"""
+from __future__ import annotations
+
+# ---- TPU v5e hardware constants (per chip) ----
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+HBM_PER_CHIP = 16e9          # bytes
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             chips: int) -> dict:
+    """All inputs are per-chip quantities when chips == 1."""
+    terms = {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": hbm_bytes / (chips * HBM_BW),
+        "collective_s": coll_bytes / (chips * ICI_BW),
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    terms["bound_s"] = terms[dom]
+    total = sum(v for k, v in terms.items() if isinstance(v, float)
+                and k.endswith("_s") and k != "bound_s")
+    terms["balance_fraction"] = terms["bound_s"] / total if total else 0.0
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: int, mode: str) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for a forward pass."""
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+combination on the production mesh, record memory / cost / collective
+analysis for the roofline.
+
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--fedx]
+
+Each run writes results/dryrun/<arch>__<shape>__<mesh>.json (resumable:
+existing files are skipped unless --force).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape
+from repro.launch.analysis import roofline, model_flops
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (input_specs, make_prefill_step,
+                                make_serve_step, make_serve_step_encdec,
+                                make_train_step)
+from repro.models.transformer import build_model
+from repro.sharding import mesh_context, rules
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _spec_tree(mesh, tree, rule):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, rule(mesh, p, l)), tree)
+
+
+def lower_combo(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+                fedx: bool = False, donate: bool = True,
+                kv_int8: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    B, S = shape.global_batch, shape.seq_len
+    window = (cfg.sliding_window
+              if (shape_name == "long_500k"
+                  and cfg.long_context == "sliding_window") else None)
+    max_seq = S + (cfg.vision_tokens if shape.mode != "decode" else 0)
+    model = build_model(cfg, max_seq=max_seq)
+
+    t0 = time.time()
+    with mesh_context(mesh):
+        if shape.mode == "train":
+            train_step, init_state = make_train_step(model)
+            state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+            state_sh = rules.state_shardings(mesh, state_shapes)
+            batch = input_specs(cfg, shape)
+            batch_sh = _spec_tree(mesh, batch, rules.batch_spec)
+            fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_shapes, batch)
+        elif shape.mode == "prefill":
+            prefill = make_prefill_step(model, max_len=max_seq)
+            param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            param_sh = _spec_tree(mesh, param_shapes, rules.param_spec)
+            batch = input_specs(cfg, shape)
+            batch_sh = _spec_tree(mesh, batch, rules.batch_spec)
+            cache_shapes = jax.eval_shape(
+                lambda: model.cache_init(B, max_seq))
+            cache_sh = _spec_tree(mesh, cache_shapes, rules.cache_spec)
+            fn = jax.jit(prefill, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+            lowered = fn.lower(param_shapes, batch)
+        else:  # decode
+            param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            param_sh = _spec_tree(mesh, param_shapes, rules.param_spec)
+            cache_shapes = jax.eval_shape(
+                lambda: model.cache_init(B, S, quantized=kv_int8))
+            cache_sh = _spec_tree(mesh, cache_shapes, rules.cache_spec)
+            tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            tok_sh = NamedSharding(mesh, rules.batch_spec(mesh, (), tok))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_sh = NamedSharding(mesh, P())
+            # enc-dec archs: cross K/V live in the (prefilled) cache, so
+            # decode needs no encoder inputs
+            step = make_serve_step(model, window=window)
+            fn = jax.jit(step,
+                         in_shardings=(param_sh, tok_sh, cache_sh, pos_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(param_shapes, tok, cache_shapes, pos)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    hc = hlo_analyze(hlo, chips, pod_size=256 if multi_pod else None)
+
+    # the SPMD program is per-device: parsed quantities are per-device,
+    # except collective link bytes which sum ring traffic per group —
+    # already a per-participating-chip figure.
+    flops_per_dev = hc.dot_flops
+    bytes_per_dev = hc.hbm_bytes
+    coll_per_chip = hc.collective_link_bytes
+    rf = roofline(flops_per_dev, bytes_per_dev, coll_per_chip, 1)
+
+    n_params = cfg.num_params()
+    n_active = cfg.num_active_params()
+    tokens = B * (S if shape.mode in ("train", "prefill") else 1)
+    mflops = model_flops(n_active, tokens,
+                         "train" if shape.mode == "train" else "fwd")
+
+    result = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "kv_int8": kv_int8,
+        "chips": chips, "mode": shape.mode,
+        "seq_len": S, "global_batch": B,
+        "window": window,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops_per_device": flops_per_dev,
+            "hbm_bytes_per_device": bytes_per_dev,
+            "xla_flops_uncorrected": float(cost.get("flops", 0.0)),
+            "xla_bytes_uncorrected": float(cost.get("bytes accessed", 0.0)),
+            "n_dots": hc.n_dots, "n_collectives": hc.n_collectives,
+            "analysis_flags": hc.flagged,
+        },
+        "collectives": {"link_bytes_per_chip": coll_per_chip,
+                        "cross_pod_link_bytes": hc.cross_pod_link_bytes,
+                        "by_kind": hc.collectives_by_kind,
+                        "top": hc.top_collectives},
+        "top_dots": hc.top_dots,
+        "roofline": rf,
+        "model": {"params": n_params, "active_params": n_active,
+                  "model_flops_global": mflops,
+                  "model_flops_per_device": mflops / chips,
+                  "useful_flops_ratio":
+                      (mflops / chips) / flops_per_dev if flops_per_dev else None},
+    }
+    return result
+
+
+def lower_fedx_round(arch_name: str, local_steps: int = 8) -> dict:
+    """The paper's technique at pod scale: each pod is a federation
+    client holding an explicit model replica (leading pod dim, sharded
+    over the `pod` mesh axis; `vmap` runs the pods independently — the
+    dual of shard_map that XLA's partial-manual partitioner still
+    chokes on).  Each pod runs ``local_steps`` AdamW steps with ZERO
+    cross-pod collectives, uploads one fp32 score, and the winner's
+    weights are fetched once (Alg. 3).
+
+    Compare ``cross_pod_link_bytes`` against the synchronous baseline
+    (train_step on the same mesh) — that is Fig. 6 at pod scale.
+
+    NOTE: runs without the mesh_context activation constraints (they
+    are written for unbatched layouts); intra-pod sharding comes from
+    in_shardings propagation, so intra-pod efficiency is the baseline's
+    business — this lowering isolates the CROSS-POD schedule.
+    """
+    cfg = get_arch(arch_name)
+    shape = get_shape("train_4k")
+    mesh = make_production_mesh(multi_pod=True)
+    chips = mesh.devices.size
+    n_pods = 2
+    model = build_model(cfg, max_seq=shape.seq_len)
+    train_step, init_state = make_train_step(model)
+
+    def per_pod(state, batch):                 # one pod's round
+        def body(st, micro):
+            st, metrics = train_step(st, micro)
+            return st, metrics["loss"]
+
+        micro = jax.tree.map(
+            lambda a: a.reshape(local_steps, a.shape[0] // local_steps,
+                                *a.shape[1:]), batch)
+        state, losses = jax.lax.scan(body, state, micro)
+        return state, losses[-1]
+
+    def fed_round(states, batches):
+        states, scores = jax.vmap(per_pod)(states, batches)   # pods x 4B
+        winner = jnp.argmin(scores)
+        # GetBestModel: one model transfer from the winning pod
+        params = jax.tree.map(
+            lambda w: jnp.broadcast_to(w[winner][None], w.shape),
+            states["params"])
+        return dict(states, params=params), scores
+
+    def pod_spec(base: P) -> P:
+        return P("pod", *base)
+
+    state_shapes = jax.eval_shape(
+        jax.vmap(init_state),
+        jax.random.split(jax.random.PRNGKey(0), n_pods))
+    state_sh = jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(
+            mesh, pod_spec(rules.param_spec(
+                mesh, p, jax.ShapeDtypeStruct(l.shape[1:], l.dtype)))
+            if l.ndim > 1 else P("pod")),
+        state_shapes)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {k: jax.ShapeDtypeStruct((n_pods, v.shape[0] // n_pods)
+                                     + v.shape[1:], v.dtype)
+             for k, v in input_specs(cfg, shape).items()}
+    batch_sh = jax.tree.map(
+        lambda l: NamedSharding(mesh, P("pod", "data",
+                                        *[None] * (l.ndim - 2))), batch)
+    t0 = time.time()
+    with mesh_context(mesh, batch_axes_override=("data",)):
+        lowered = jax.jit(fed_round, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None)).lower(
+                              state_shapes, batch)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    hc = hlo_analyze(hlo, chips, pod_size=256)
+    rf = roofline(hc.dot_flops, hc.hbm_bytes, hc.collective_link_bytes, 1)
+    return {
+        "arch": arch_name, "shape": "train_4k", "mesh": "pod2x16x16",
+        "mode": f"fedx_round(local_steps={local_steps})",
+        "compile_s": round(t_compile, 2),
+        "cost": {"flops_per_device": hc.dot_flops,
+                 "hbm_bytes_per_device": hc.hbm_bytes},
+        "collectives": {"link_bytes_per_chip": hc.collective_link_bytes,
+                        "cross_pod_link_bytes": hc.cross_pod_link_bytes,
+                        "by_kind": hc.collectives_by_kind,
+                        "top": hc.top_collectives},
+        "roofline": rf,
+    }
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, force: bool,
+            out_dir: str, kv_int8: bool = False) -> bool:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{shape}_kvint8" if kv_int8 else shape
+    os.makedirs(out_dir, exist_ok=True)
+    out = os.path.join(out_dir, f"{arch}__{tag}__{mesh_tag}.json")
+    if os.path.exists(out) and not force:
+        print(f"SKIP (exists) {arch} {tag} {mesh_tag}")
+        return True
+    print(f"=== dry-run {arch} x {tag} on {mesh_tag} ===", flush=True)
+    try:
+        res = lower_combo(arch, shape, multi_pod=multi_pod,
+                          kv_int8=kv_int8)
+    except Exception as e:
+        traceback.print_exc()
+        if os.path.exists(out):
+            os.remove(out)          # never leave a stale artifact behind
+        with open(out + ".FAILED", "w") as f:
+            f.write(f"{type(e).__name__}: {e}\n")
+        return False
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+    r = res["roofline"]
+    print(f"  compile={res['compile_s']}s flops/dev={res['cost']['flops_per_device']:.3e} "
+          f"dominant={r['dominant']} bound={r['bound_s']*1e3:.3f}ms "
+          f"coll_bytes/chip={res['collectives']['link_bytes_per_chip']:.3e}",
+          flush=True)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fedx", action="store_true",
+                    help="lower the FedX cross-pod round for --arch")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized KV cache (decode shapes)")
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.fedx:
+        assert args.arch, "--fedx requires --arch"
+        res = lower_fedx_round(args.arch, local_steps=args.local_steps)
+        os.makedirs(args.out, exist_ok=True)
+        out = os.path.join(args.out,
+                           f"{args.arch}__fedx_round__pod2x16x16.json")
+        with open(out, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"fedx round: compile={res['compile_s']}s "
+              f"cross_pod_bytes={res['collectives']['cross_pod_link_bytes']:.3e} "
+              f"total_coll={res['collectives']['link_bytes_per_chip']:.3e}")
+        sys.exit(0)
+
+    combos = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    ok = True
+    for a, s, mp in combos:
+        ok &= run_one(a, s, mp, args.force, args.out,
+                      kv_int8=args.kv_int8)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,396 @@
+"""Mini HLO cost model over ``compiled.as_text()``.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+with scan-over-layers that under-counts an 80-layer model by ~80x.  This
+module parses the scheduled HLO text and computes loop-corrected,
+per-device estimates:
+
+- ``dot_flops``:     2 * prod(result) * prod(contracting) per dot,
+                     multiplied by the loop trip count of its computation
+                     (from the ``known_trip_count`` backend_config).
+- ``hbm_bytes``:     per top-level instruction, result + operand bytes
+                     (fusion-aware: internal fusion ops don't touch HBM),
+                     skipping no-traffic ops (tuple/GTE/bitcast/...).
+- ``collectives``:   ring-cost link bytes per chip, loop-corrected.
+
+Multipliers propagate through the call graph: a computation called from
+a while body inherits caller_multiplier x trip_count; fusions inherit
+their caller's multiplier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+}
+
+_NO_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "after-all", "iota", "partition-id",
+               "replica-id", "rng-bit-generator", "reshape", "broadcast",
+               "while", "conditional", "call"}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_DECL = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],\.]+))")
+_OP_WORD = re.compile(r"([\w\-]+)\(")
+
+
+def _parse_instr_line(line: str):
+    """'%name = SHAPE op(...)...' -> (name, shape_str, op) or None.
+
+    Handles tuple shapes containing '/*index=N*/' comments and layout
+    annotations by scanning for the balanced closing paren.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rhs = s[eq + 3:].lstrip()
+    if rhs.startswith("("):            # tuple shape: find matching paren
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rhs[:i + 1]
+                    rest = rhs[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    m = _OP_WORD.match(rest)
+    if not m:
+        return None
+    return name, shape, m.group(1)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(shape_str: str) -> Tuple[List[int], str]:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m:
+        return [], ""
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims, m.group(1)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]
+    instrs: List[Instr]
+    is_entry: bool
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    depth = 0
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if "{" in line and "->" in line:
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    params = {pm.group(1): pm.group(2)
+                              for pm in _PARAM_DECL.finditer(m.group(2))}
+                    cur = Computation(m.group(1), params, [],
+                                      line.strip().startswith("ENTRY"))
+                    depth = line.count("{") - line.count("}")
+                    if depth <= 0:
+                        comps[cur.name] = cur
+                        cur = None
+            continue
+        depth += line.count("{") - line.count("}")
+        parsed = _parse_instr_line(line)
+        if parsed:
+            cur.instrs.append(Instr(parsed[0], parsed[1], parsed[2],
+                                    line.strip()))
+        if depth <= 0:
+            comps[cur.name] = cur
+            cur = None
+    return comps
+
+
+def _trip_counts(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """while-body computation name -> trip count."""
+    trips: Dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op != "while":
+                continue
+            bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+            if not bm:
+                continue
+            body = bm.group(1)
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.line)
+            if tm:
+                trips[body] = int(tm.group(1))
+            else:
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                tc = 1
+                if cm and cm.group(1) in comps:
+                    consts = re.findall(r"constant\((\d+)\)",
+                                        "\n".join(i.line for i in
+                                                  comps[cm.group(1)].instrs))
+                    if consts:
+                        tc = max(int(c) for c in consts)
+                trips[body] = tc
+    return trips
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution-count multiplier per computation (entry = 1)."""
+    trips = _trip_counts(comps)
+    # call sites: caller -> [(callee, is_loop_body)]
+    callees: Dict[str, List[Tuple[str, bool]]] = {c: [] for c in comps}
+    ref_re = re.compile(r"(calls|body|condition|to_apply|branch_computations"
+                        r"|true_computation|false_computation)="
+                        r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+    for comp in comps.values():
+        for ins in comp.instrs:
+            for m in ref_re.finditer(ins.line):
+                kind = m.group(1)
+                names = m.group(2) if m.group(2) is not None else m.group(3)
+                for callee in re.split(r"[,\s]+", names):
+                    callee = callee.strip("%{} ")
+                    if callee in comps:
+                        callees[comp.name].append((callee, kind == "body"))
+
+    mult: Dict[str, float] = {c.name: 0.0 for c in comps.values()}
+    entries = [c.name for c in comps.values() if c.is_entry] or \
+        [list(comps)[-1]]
+    for e in entries:
+        mult[e] = 1.0
+
+    # propagate topologically (iterate to fixpoint; HLO call graph is a DAG)
+    for _ in range(len(comps)):
+        changed = False
+        for caller, edges in callees.items():
+            cm = mult.get(caller, 0.0)
+            if cm == 0.0:
+                continue
+            for callee, is_body in edges:
+                add = cm * (trips.get(callee, 1) if is_body else 1)
+                # a callee may have several call sites; recompute as sum
+                total = 0.0
+                for c2, edges2 in callees.items():
+                    for cal, isb in edges2:
+                        if cal == callee and mult.get(c2, 0.0) > 0:
+                            total += mult[c2] * (trips.get(cal, 1) if isb else 1)
+                if abs(total - mult.get(callee, 0.0)) > 1e-9:
+                    mult[callee] = total
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _operand_names(line: str) -> List[str]:
+    m = re.search(r"\((.*)\)", line)
+    if not m:
+        return []
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float
+    hbm_bytes: float
+    collective_link_bytes: float
+    collectives_by_kind: Dict[str, float]
+    n_dots: int
+    n_collectives: int
+    flagged: List[str]
+    top_collectives: List[dict] = dataclasses.field(default_factory=list)
+    top_dots: List[dict] = dataclasses.field(default_factory=list)
+    cross_pod_link_bytes: float = 0.0
+
+
+def _inline_comps(comps: Dict[str, Computation]) -> set:
+    """Computations inlined into their caller's kernel (fusion bodies,
+    reducers, branch computations) — their internal ops touch VMEM/regs,
+    not HBM.  while bodies/conditions are NOT inline: they run as real
+    loop iterations."""
+    inline = set()
+    ref_re = re.compile(r"(calls|to_apply|branch_computations"
+                        r"|true_computation|false_computation)="
+                        r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+    for comp in comps.values():
+        for ins in comp.instrs:
+            for m in ref_re.finditer(ins.line):
+                names = m.group(2) if m.group(2) is not None else m.group(3)
+                for callee in re.split(r"[,\s]+", names):
+                    callee = callee.strip("%{} ")
+                    if callee in comps:
+                        inline.add(callee)
+    return inline
+
+
+def analyze(hlo: str, total_devices: int,
+            pod_size: Optional[int] = None) -> HloCost:
+    """pod_size: when set, collectives whose replica groups span a pod
+    boundary (device ids on both sides of a multiple of pod_size) are
+    accumulated into cross_pod_link_bytes — the DCI traffic."""
+    comps = parse_module(hlo)
+    mult = _multipliers(comps)
+    inline = _inline_comps(comps)
+    flagged: List[str] = []
+    cross_pod = 0.0
+
+    dot_flops = 0.0
+    hbm = 0.0
+    coll: Dict[str, float] = {}
+    n_dots = n_coll = 0
+    coll_items: List[dict] = []
+    dot_items: List[dict] = []
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            m = 1.0  # unreached computations shouldn't exist; be safe
+            flagged.append(f"no-multiplier:{comp.name}")
+        shapes: Dict[str, str] = dict(comp.params)
+        fusion_comp = comp.name in inline
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.shape
+            # ---- dots (counted wherever they live) ----
+            if ins.op == "dot":
+                rdims, _ = shape_dims(ins.shape)
+                ops = _operand_names(ins.line)
+                km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+                k = 1
+                if km and ops:
+                    lhs_shape = shapes.get(ops[0])
+                    if lhs_shape:
+                        ldims, _ = shape_dims(lhs_shape)
+                        for idx in km.group(1).split(","):
+                            if idx and int(idx) < len(ldims):
+                                k *= ldims[int(idx)]
+                    else:
+                        flagged.append(f"dot-lhs-unresolved:{comp.name}")
+                res = 1
+                for d in rdims:
+                    res *= d
+                dot_flops += 2.0 * res * k * m
+                n_dots += 1
+                dot_items.append({"flops": 2.0 * res * k * m,
+                                  "shape": ins.shape, "k": k, "mult": m,
+                                  "comp": comp.name,
+                                  "meta": _metadata_name(ins.line)})
+            elif ins.op == "convolution":
+                rdims, _ = shape_dims(ins.shape)
+                res = 1
+                for d in rdims:
+                    res *= d
+                # approximate: 2 * out * (kernel_elems) — parse kernel shape
+                ops = _operand_names(ins.line)
+                kshape = shapes.get(ops[1]) if len(ops) > 1 else None
+                kel = 1
+                if kshape:
+                    kd, _ = shape_dims(kshape)
+                    out_feat = kd[-1] if kd else 1
+                    kel = max(1, int(
+                        (1 if not kd else
+                         int(__import__("math").prod(kd)) // max(out_feat, 1))))
+                dot_flops += 2.0 * res * kel * m
+                n_dots += 1
+            # ---- collectives ----
+            if ins.op in _COLL_KINDS:
+                n = total_devices
+                spans_pod = pod_size is not None  # conservative default
+                gm = re.search(r"replica_groups=\{(.*?)\}\}?,", ins.line)
+                if gm:
+                    first = gm.group(1).split("},{")[0].strip("{}")
+                    if first:
+                        ids = [int(i) for i in first.split(",")]
+                        n = len(ids)
+                        if pod_size is not None:
+                            pods = {i // pod_size for i in ids}
+                            spans_pod = len(pods) > 1
+                else:
+                    gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]",
+                                    ins.line)
+                    if gm2:
+                        n = int(gm2.group(2))
+                b = shape_bytes(ins.shape) * m
+                if ins.op == "all-reduce":
+                    lb = 2.0 * b * (n - 1) / max(n, 1)
+                elif ins.op == "all-gather":
+                    lb = b * (n - 1) / max(n, 1)
+                elif ins.op == "reduce-scatter":
+                    lb = b * (n - 1)
+                elif ins.op == "all-to-all":
+                    lb = b * (n - 1) / max(n, 1)
+                else:  # collective-permute
+                    lb = b
+                coll[ins.op] = coll.get(ins.op, 0.0) + lb
+                n_coll += 1
+                if pod_size is not None and spans_pod:
+                    cross_pod += lb
+                coll_items.append({"kind": ins.op, "link_bytes": lb,
+                                   "group": n, "mult": m,
+                                   "shape": ins.shape[:120],
+                                   "comp": comp.name,
+                                   "meta": _metadata_name(ins.line)})
+            # ---- HBM traffic: top-level (non-fusion-internal) ops ----
+            if not fusion_comp and ins.op not in _NO_TRAFFIC:
+                b = shape_bytes(ins.shape)
+                for opn in _operand_names(ins.line):
+                    if opn in shapes:
+                        b += shape_bytes(shapes[opn])
+                hbm += b * m
+
+    coll_items.sort(key=lambda d: -d["link_bytes"])
+    dot_items.sort(key=lambda d: -d["flops"])
+    return HloCost(dot_flops=dot_flops, hbm_bytes=hbm,
+                   collective_link_bytes=sum(coll.values()),
+                   collectives_by_kind=coll, n_dots=n_dots,
+                   n_collectives=n_coll, flagged=flagged[:20],
+                   top_collectives=coll_items[:12], top_dots=dot_items[:12],
+                   cross_pod_link_bytes=cross_pod)
+
+
+def _metadata_name(line: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    return m.group(1)[-110:] if m else ""

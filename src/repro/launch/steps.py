@@ -1,0 +1,140 @@
+"""Canonical step functions lowered by the launcher and the dry-run.
+
+``make_train_step``   — fwd + bwd + AdamW update (train_4k)
+``make_prefill_step`` — full-context forward producing logits + KV cache
+``make_serve_step``   — ONE new token against a seq_len KV cache (decode)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.transformer import Model, build_model
+from repro import optim as opt_lib
+
+
+def softmax_xent(logits, labels):
+    """logits: (B,S,V) fp32; labels: (B,S) int32, -1 = ignore."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, _, aux = model.apply(params, batch, mode="train")
+        loss = softmax_xent(logits, batch["labels"])
+        return loss + aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(model: Model, optimizer: Optional[opt_lib.Optimizer] = None,
+                    accum_steps: int = 1):
+    """``accum_steps > 1``: gradient accumulation — the global batch is
+    split into microbatches scanned sequentially (same numerics as one
+    big batch at 1/accum_steps the activation memory)."""
+    optimizer = optimizer or opt_lib.adamw(opt_lib.warmup_cosine(3e-4, 100, 10_000))
+    loss_fn = make_loss_fn(model)
+
+    def _grads(params, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        if accum_steps == 1:
+            return grad_fn(params, batch)
+
+        micro = jax.tree.map(
+            lambda a: a.reshape(accum_steps, a.shape[0] // accum_steps,
+                                *a.shape[1:]), batch)
+
+        def body(carry, mb):
+            (tot, (loss, aux)), g = grad_fn(params, mb)
+            acc_g, acc_m = carry
+            acc_g = jax.tree.map(
+                lambda x, y: x + y.astype(jnp.float32) / accum_steps,
+                acc_g, g)
+            acc_m = (acc_m[0] + tot / accum_steps,
+                     (acc_m[1][0] + loss / accum_steps,
+                      acc_m[1][1] + aux / accum_steps))
+            return (acc_g, acc_m), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = (jnp.float32(0), (jnp.float32(0), jnp.float32(0)))
+        (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), micro)
+        return metrics, grads
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        (total, (loss, aux)), grads = _grads(state["params"], batch)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, state["opt"],
+                                              state["params"], state["step"])
+        params = opt_lib.apply_updates(state["params"], updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return new_state, metrics
+
+    def init_state(rng):
+        params = model.init(rng)
+        return {"params": params, "opt": optimizer.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return train_step, init_state
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        cache = model.cache_init(batch["tokens"].shape[0], max_len)
+        logits, cache, _ = model.apply(params, batch, mode="prefill",
+                                       cache=cache)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(model: Model, window: Optional[int] = None):
+    """One decode step: new token + cache @ cache_pos -> logits + cache."""
+    def serve_step(params, token, cache, cache_pos):
+        batch = {"tokens": token}                     # (B, 1)
+        logits, cache, _ = model.apply(params, batch, mode="decode",
+                                       cache=cache, cache_pos=cache_pos,
+                                       window=window)
+        return logits[:, 0], cache
+    return serve_step
+
+
+def make_serve_step_encdec(model: Model, window: Optional[int] = None):
+    def serve_step(params, token, cache, cache_pos, enc_out):
+        batch = {"tokens": token, "enc_out": enc_out}
+        logits, cache, _ = model.apply(params, batch, mode="decode",
+                                       cache=cache, cache_pos=cache_pos,
+                                       window=window)
+        return logits[:, 0], cache
+    return serve_step
+
+
+# ------------------------------------------------------------- specs ----
+def input_specs(cfg: ArchConfig, shape: InputShape, *, dtype=jnp.bfloat16
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    specs: Dict[str, Any] = {}
+    if shape.mode in ("train", "prefill"):
+        specs["tokens"] = sd((B, S), jnp.int32)
+        if shape.mode == "train":
+            specs["labels"] = sd((B, S), jnp.int32)
+        if cfg.vision_tokens:
+            specs["image_embeds"] = sd((B, cfg.vision_tokens, cfg.d_model), dtype)
+        if cfg.encoder_layers:
+            specs["encoder_embeds"] = sd((B, cfg.encoder_seq, cfg.d_model), dtype)
+    else:  # decode
+        # enc-dec archs need no encoder inputs at decode time: cross K/V
+        # are prefilled into the cache (see attention.gqa_apply)
+        specs["tokens"] = sd((B, 1), jnp.int32)
+    return specs

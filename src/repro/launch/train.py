@@ -1,0 +1,83 @@
+"""Training driver.
+
+Reduced configs execute for real on the host devices; full configs are
+exercised through the dry-run (``repro.launch.dryrun``).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_arch
+from repro.data.synthetic import make_token_dataset
+from repro.launch.steps import make_train_step
+from repro.models.transformer import build_model
+from repro import optim as opt_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, max_seq=args.seq)
+    optimizer = opt_lib.adamw(opt_lib.warmup_cosine(args.lr, 10, args.steps))
+    train_step, init_state = make_train_step(model, optimizer)
+    train_step = jax.jit(train_step, donate_argnums=(0,))
+
+    rng = jax.random.PRNGKey(0)
+    state = init_state(rng)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} (reduced={args.reduced}) params={n_params:,}")
+
+    data = make_token_dataset(jax.random.PRNGKey(1),
+                              n_seqs=args.batch * 8, seq_len=args.seq,
+                              vocab=cfg.vocab_size)
+    extra = {}
+    if cfg.vision_tokens:
+        extra["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.encoder_layers:
+        extra["encoder_embeds"] = jnp.zeros(
+            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    nb = data["tokens"].shape[0] // args.batch
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        i = step % nb
+        batch = {k: v[i * args.batch:(i + 1) * args.batch]
+                 for k, v in data.items()}
+        batch.update(extra)
+        state, metrics = train_step(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d}  loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({dt / (step + 1):.3f}s/step)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            path = save_checkpoint(args.ckpt_dir, step + 1, state)
+            print(f"checkpoint -> {path}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.metaheuristics.base import Metaheuristic, best_member
+from repro.metaheuristics.avo import avo
+from repro.metaheuristics.bwo import bwo
+from repro.metaheuristics.pso import pso
+from repro.metaheuristics.gwo import gwo
+from repro.metaheuristics.sca import sca
+
+REGISTRY = {"bwo": bwo, "pso": pso, "gwo": gwo, "sca": sca, "avo": avo}
+
+__all__ = ["Metaheuristic", "best_member", "avo", "bwo", "pso", "gwo",
+           "sca", "REGISTRY"]

@@ -1,0 +1,55 @@
+"""African Vultures Optimization (FedAVO baseline, Hossain & Imteaj
+2023, arXiv:2305.01154) — continuous adaptation for NN weights.
+
+Two best vultures lead; each member follows one (probabilistically),
+with exploration (random walk around the leader) early and exploitation
+(spiral/levy-like approach) late.  Move sizes are *relative* to weight
+magnitude like the other heuristics in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.metaheuristics.base import Metaheuristic, init_population
+
+
+def avo(max_iter: int = 20, step_scale: float = 0.1,
+        p1: float = 0.6) -> Metaheuristic:
+
+    def init(rng, x0, pop, fit_fn):
+        return init_population(rng, x0, pop, fit_fn)
+
+    def step(rng, state, fit_fn):
+        pop, fit = state["pop"], state["fit"]
+        P, D = pop.shape
+        t = state["t"].astype(jnp.float32)
+        # exploration-exploitation schedule (paper's F factor, simplified)
+        F = (2.0 * jnp.cos(jnp.pi / 2 * t / max_iter) + 1.0) \
+            * (1.0 - t / max_iter)
+        order = jnp.argsort(fit)
+        best1, best2 = pop[order[0]], pop[order[1]]
+
+        k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+        pick1 = jax.random.bernoulli(k1, p1, (P, 1))
+        leader = jnp.where(pick1, best1[None], best2[None])
+
+        r = jax.random.uniform(k2, (P, D), pop.dtype)
+        walk = (2.0 * r - 1.0) * F                       # exploration
+        spiral = (jax.random.uniform(k3, (P, D), pop.dtype)
+                  * jnp.cos(2 * jnp.pi
+                            * jax.random.uniform(k4, (P, D), pop.dtype))
+                  * jnp.abs(F))                           # exploitation
+        move = jnp.where(jnp.abs(F) >= 1.0, walk, spiral) \
+            * jnp.abs(leader - pop)
+        bound = step_scale * (jnp.abs(leader) + 1e-3)
+        new_pop = leader - jnp.clip(move, -bound, bound) \
+            * jnp.sign(leader - pop + 1e-12)
+        new_fit = fit_fn(new_pop)
+        # elitism
+        worst = jnp.argmax(new_fit)
+        bidx = jnp.argmin(fit)
+        new_pop = new_pop.at[worst].set(pop[bidx])
+        new_fit = new_fit.at[worst].set(fit[bidx])
+        return {"pop": new_pop, "fit": new_fit, "t": state["t"] + 1}
+
+    return Metaheuristic("avo", init, step)

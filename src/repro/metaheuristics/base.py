@@ -1,0 +1,44 @@
+"""Population meta-heuristic interface.
+
+A :class:`Metaheuristic` evolves a population of flat parameter vectors
+``(P, D)`` against a batched fitness function ``fit_fn: (P, D) -> (P,)``
+(lower is better).  ``init``/``step`` are pure and jit-friendly; the
+population lives on-device and per-generation work is fully vectorized
+(no Python GA loops).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+FitFn = Callable[[jnp.ndarray], jnp.ndarray]
+State = Dict[str, Any]
+
+
+class Metaheuristic(NamedTuple):
+    name: str
+    init: Callable[[jax.Array, jnp.ndarray, int, FitFn], State]
+    step: Callable[[jax.Array, State, FitFn], State]
+
+
+def init_population(rng, x0: jnp.ndarray, pop: int, fit_fn: FitFn,
+                    spread: float = 0.02) -> State:
+    """Seed a population around x0 (member 0 is x0 itself)."""
+    noise = jax.random.normal(rng, (pop, x0.shape[0]), x0.dtype) * spread
+    noise = noise * (jnp.abs(x0)[None, :] + 1e-3)
+    noise = noise.at[0].set(0.0)
+    population = x0[None, :] + noise
+    return {"pop": population, "fit": fit_fn(population),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def best_member(state: State):
+    i = jnp.argmin(state["fit"])
+    return state["pop"][i], state["fit"][i]
+
+
+def select_best(pop, fit, n):
+    idx = jnp.argsort(fit)[:n]
+    return pop[idx], fit[idx]

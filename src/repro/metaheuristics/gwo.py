@@ -1,0 +1,46 @@
+"""Grey Wolf Optimizer (FedGWO baseline, Abasi et al. 2022)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.metaheuristics.base import Metaheuristic, init_population
+
+
+def gwo(max_iter: int = 20, step_scale: float = 0.1) -> Metaheuristic:
+    """``step_scale`` bounds the hunt step relative to weight magnitude —
+    NN weights need far smaller moves than GWO's canonical box search."""
+
+    def init(rng, x0, pop, fit_fn):
+        return init_population(rng, x0, pop, fit_fn)
+
+    def step(rng, state, fit_fn):
+        pop, fit = state["pop"], state["fit"]
+        P, D = pop.shape
+        t = state["t"].astype(jnp.float32)
+        a = jnp.maximum(2.0 * (1.0 - t / max_iter), 0.0)
+        order = jnp.argsort(fit)
+        alpha, beta, delta = pop[order[0]], pop[order[1]], pop[order[2]]
+
+        def hunt(key, leader):
+            k1, k2 = jax.random.split(key)
+            r1 = jax.random.uniform(k1, (P, D), pop.dtype)
+            r2 = jax.random.uniform(k2, (P, D), pop.dtype)
+            A = 2 * a * r1 - a
+            C = 2 * r2
+            dist = jnp.abs(C * leader[None] - pop)
+            move = A * dist
+            bound = step_scale * (jnp.abs(leader)[None] + 1e-3)
+            return leader[None] - jnp.clip(move, -bound, bound)
+
+        k1, k2, k3 = jax.random.split(rng, 3)
+        new_pop = (hunt(k1, alpha) + hunt(k2, beta) + hunt(k3, delta)) / 3.0
+        new_fit = fit_fn(new_pop)
+        # elitism: never lose the incumbent best
+        worst = jnp.argmax(new_fit)
+        best = jnp.argmin(fit)
+        new_pop = new_pop.at[worst].set(pop[best])
+        new_fit = new_fit.at[worst].set(fit[best])
+        return {"pop": new_pop, "fit": new_fit, "t": state["t"] + 1}
+
+    return Metaheuristic("gwo", init, step)

@@ -1,0 +1,38 @@
+"""Sine Cosine Algorithm (FedSCA baseline, Abasi et al. 2022)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.metaheuristics.base import Metaheuristic, init_population
+
+
+def sca(a: float = 2.0, max_iter: int = 20,
+        step_scale: float = 0.1) -> Metaheuristic:
+
+    def init(rng, x0, pop, fit_fn):
+        return init_population(rng, x0, pop, fit_fn)
+
+    def step(rng, state, fit_fn):
+        pop, fit = state["pop"], state["fit"]
+        P, D = pop.shape
+        t = state["t"].astype(jnp.float32)
+        r1 = a * jnp.maximum(1.0 - t / max_iter, 0.0)
+        best = pop[jnp.argmin(fit)]
+        k2, k3, k4 = jax.random.split(rng, 3)
+        r2 = jax.random.uniform(k2, (P, D), pop.dtype) * 2 * jnp.pi
+        r3 = jax.random.uniform(k3, (P, D), pop.dtype) * 2
+        r4 = jax.random.uniform(k4, (P, D), pop.dtype)
+        dist = jnp.abs(r3 * best[None] - pop)
+        move = jnp.where(r4 < 0.5, r1 * jnp.sin(r2) * dist,
+                         r1 * jnp.cos(r2) * dist)
+        bound = step_scale * (jnp.abs(pop) + 1e-3)
+        new_pop = pop + jnp.clip(move, -bound, bound)
+        new_fit = fit_fn(new_pop)
+        worst = jnp.argmax(new_fit)
+        bidx = jnp.argmin(fit)
+        new_pop = new_pop.at[worst].set(pop[bidx])
+        new_fit = new_fit.at[worst].set(fit[bidx])
+        return {"pop": new_pop, "fit": new_fit, "t": state["t"] + 1}
+
+    return Metaheuristic("sca", init, step)

@@ -1,0 +1,5 @@
+from repro.models.transformer import Model, build_model
+from repro.models import attention, cnn, modules, moe, ssm, xlstm
+
+__all__ = ["Model", "build_model", "attention", "cnn", "modules", "moe",
+           "ssm", "xlstm"]

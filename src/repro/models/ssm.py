@@ -1,0 +1,142 @@
+"""Mamba selective-SSM block (Jamba's mixer), chunked for TPU.
+
+Training/prefill uses a *chunked associative scan*: the sequence is cut
+into ``cfg.ssm.chunk``-length chunks; within a chunk the linear
+recurrence is computed with ``lax.associative_scan`` (parallel, MXU
+friendly), and a small ``(B, d_inner, N)`` state is carried across chunks
+with ``lax.scan``.  This bounds the materialized (B, c, d_inner, N)
+tensor to one chunk — the TPU-native replacement for the CUDA selective
+scan kernel.  Decode is a single recurrence step on the cached state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as nn
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, cfg.d_model // 16)
+    return di, dt_rank, s.state_dim, s.conv_width
+
+
+def mamba_init(rng, cfg: ArchConfig):
+    di, dt_rank, N, cw = _dims(cfg)
+    d = cfg.d_model
+    r = jax.random.split(rng, 6)
+    dt = cfg.param_dtype
+    p = {
+        "in_proj": nn.dense_init(r[0], d, 2 * di, dtype=dt),
+        "conv_w": (jax.random.normal(r[1], (cw, di), jnp.float32) * cw ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": nn.dense_init(r[2], di, dt_rank + 2 * N, dtype=dt),
+        "dt_proj": nn.dense_init(r[3], dt_rank, di, bias=True, dtype=dt),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": nn.dense_init(r[4], di, d, dtype=dt),
+    }
+    return p
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, _, N, cw = _dims(cfg)
+    return {"h": jnp.zeros((batch, di, N), dtype),
+            "conv": jnp.zeros((batch, cw - 1, di), dtype)}
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x: (B,S,di); w: (cw, di) depthwise."""
+    cw = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return y + b
+
+
+def _ssm_params(p, x_in, cfg):
+    """Common dt/B/C computation.  x_in: (B,S,di)."""
+    di, dt_rank, N, _ = _dims(cfg)
+    xdb = nn.dense_apply(p["x_proj"], x_in)
+    dt_raw, B_ssm, C_ssm = jnp.split(xdb, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(nn.dense_apply(p["dt_proj"], dt_raw).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                                   # (di, N)
+    return dt, A, B_ssm.astype(jnp.float32), C_ssm.astype(jnp.float32)
+
+
+def mamba_apply(p, x, *, cfg: ArchConfig, mode: str, state=None, **_):
+    """x: (B,S,d) -> (y, new_state)."""
+    B, S, d = x.shape
+    di, dt_rank, N, cw = _dims(cfg)
+    xz = nn.dense_apply(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if mode == "decode":
+        # single-token recurrence on cached (h, conv) state
+        conv_state = state["conv"]                             # (B, cw-1, di)
+        x_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+        new_conv = jnp.concatenate([conv_state, x_in.astype(conv_state.dtype)],
+                                   axis=1)[:, -(cw - 1):]
+        x_act = jax.nn.silu(x_conv)
+        dt, A, B_ssm, C_ssm = _ssm_params(p, x_act, cfg)
+        # dt: (B,1,di); B/C: (B,1,N)
+        dA = jnp.exp(dt[:, 0, :, None] * A)                    # (B,di,N)
+        dBx = (dt[:, 0, :, None] * B_ssm[:, 0, None, :]
+               * x_act[:, 0, :, None].astype(jnp.float32))
+        h = state["h"] * dA + dBx                              # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, C_ssm[:, 0])[:, None, :]
+        y = y + p["D"] * x_act.astype(jnp.float32)
+        out = (y.astype(x.dtype) * jax.nn.silu(z))
+        return nn.dense_apply(p["out_proj"], out), {"h": h, "conv": new_conv}
+
+    # ---- train / prefill: chunked associative scan ----
+    x_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+    x_act = jax.nn.silu(x_conv)
+    dt, A, B_ssm, C_ssm = _ssm_params(p, x_act, cfg)
+
+    chunk = min(cfg.ssm.chunk, S)
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    nc = S // chunk
+
+    def reshape_c(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:])
+
+    xc = reshape_c(x_act.astype(jnp.float32))
+    dtc, Bc, Cc = reshape_c(dt), reshape_c(B_ssm), reshape_c(C_ssm)
+
+    def chunk_fn(h0, inputs):
+        xk, dtk, Bk, Ck = inputs                               # (B,c,...)
+        a = jnp.exp(dtk[..., None] * A)                        # (B,c,di,N)
+        b = dtk[..., None] * Bk[:, :, None, :] * xk[..., None]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = a_cum * h0[:, None] + b_cum                        # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, Ck)
+        return h[:, -1], y
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    xs = (xc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3))
+    h_last, ys = jax.lax.scan(chunk_fn, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + p["D"] * x_act.astype(jnp.float32)
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    out = nn.dense_apply(p["out_proj"], out)
+
+    new_state = None
+    if mode == "prefill" and state is not None:
+        new_state = {"h": h_last,
+                     "conv": x_in[:, -(cw - 1):].astype(jnp.float32)}
+    return out, new_state

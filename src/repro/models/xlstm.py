@@ -1,0 +1,223 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential with chunked remat).  [arXiv:2405.04517]
+
+The mLSTM is computed in a log-space-stabilized *chunkwise* form: intra-
+chunk terms are (c x c) matmuls (MXU friendly), and the per-head matrix
+state (dh x dh) is carried across chunks with ``lax.scan`` — the TPU
+adaptation of the paper's fused CUDA recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as nn
+
+LOG_EPS = -1e30
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    di = 2 * cfg.d_model
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+# ================================================================ mLSTM ==
+def mlstm_init(rng, cfg: ArchConfig):
+    d = cfg.d_model
+    di, h, dh = _mlstm_dims(cfg)
+    r = jax.random.split(rng, 8)
+    dt = cfg.param_dtype
+    return {
+        "up": nn.dense_init(r[0], d, 2 * di, dtype=dt),       # x branch + gate
+        "wq": nn.dense_init(r[1], di, di, dtype=dt),
+        "wk": nn.dense_init(r[2], di, di, dtype=dt),
+        "wv": nn.dense_init(r[3], di, di, dtype=dt),
+        "w_igate": nn.dense_init(r[4], di, h, bias=True, dtype=jnp.float32),
+        "w_fgate": nn.dense_init(r[5], di, h, bias=True, dtype=jnp.float32),
+        "out_scale": jnp.ones((di,), dt),                      # per-channel group-norm scale
+        "down": nn.dense_init(r[6], di, d, dtype=dt),
+    }
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    _, h, dh = _mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, h, dh, dh), dtype),
+            "n": jnp.zeros((batch, h, dh), dtype),
+            "m": jnp.full((batch, h), 0.0, dtype)}
+
+
+def _headify(t, h):
+    B, S, di = t.shape
+    return t.reshape(B, S, h, di // h).transpose(0, 2, 1, 3)   # (B,h,S,dh)
+
+
+def mlstm_apply(p, x, *, cfg: ArchConfig, mode: str, state=None, **_):
+    B, S, d = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    up = nn.dense_apply(p["up"], x)
+    xb, zb = jnp.split(up, 2, axis=-1)                         # (B,S,di)
+    q = _headify(nn.dense_apply(p["wq"], xb), h).astype(jnp.float32) * dh ** -0.5
+    k = _headify(nn.dense_apply(p["wk"], xb), h).astype(jnp.float32)
+    v = _headify(nn.dense_apply(p["wv"], xb), h).astype(jnp.float32)
+    li = nn.dense_apply(p["w_igate"], xb.astype(jnp.float32)).transpose(0, 2, 1)  # (B,h,S)
+    lf = jax.nn.log_sigmoid(
+        nn.dense_apply(p["w_fgate"], xb.astype(jnp.float32))).transpose(0, 2, 1)
+
+    if mode == "decode":
+        assert S == 1
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+        li0, lf0 = li[..., 0], lf[..., 0]                      # (B,h)
+        m1 = jnp.maximum(lf0 + m0, li0)
+        fg = jnp.exp(lf0 + m0 - m1)[..., None, None]
+        ig = jnp.exp(li0 - m1)[..., None, None]
+        kv = v[:, :, 0, :, None] * k[:, :, 0, None, :]         # (B,h,dh,dh)^T order below
+        C1 = fg * C0 + ig * (k[:, :, 0, :, None] * v[:, :, 0, None, :])
+        n1 = fg[..., 0] * n0 + ig[..., 0] * k[:, :, 0]
+        num = jnp.einsum("bhd,bhdv->bhv", q[:, :, 0], C1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, :, 0], n1)),
+                          jnp.exp(-m1))[..., None]
+        y = (num / den)[:, :, None, :]                          # (B,h,1,dh)
+        new_state = {"C": C1, "n": n1, "m": m1}
+        del kv
+    else:
+        chunk = min(cfg.ssm.chunk if cfg.ssm else 128, S)
+        assert S % chunk == 0
+        nc = S // chunk
+
+        def rc(t):  # (B,h,S,...) -> (nc, B,h,c,...)
+            return t.reshape(B, h, nc, chunk, *t.shape[3:]).transpose(
+                2, 0, 1, 3, *range(4, t.ndim + 1))
+
+        qs, ks, vs, lis, lfs = rc(q), rc(k), rc(v), rc(li), rc(lf)
+
+        def chunk_fn(carry, inp):
+            C0, n0, m0 = carry
+            qc, kc, vc, lic, lfc = inp                          # (B,h,c,·)
+            F = jnp.cumsum(lfc, axis=-1)                        # (B,h,c)
+            # intra-chunk log decay matrix D[i,j] = F_i - F_j + li_j, j<=i
+            Dm = F[..., :, None] - F[..., None, :] + lic[..., None, :]
+            tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+            Dm = jnp.where(tri, Dm, LOG_EPS)
+            m_intra = Dm.max(-1)                                # (B,h,c)
+            m_inter = m0[..., None] + F
+            m_i = jnp.maximum(m_inter, m_intra)                 # (B,h,c)
+            # intra term
+            S_qk = jnp.einsum("bhcd,bhjd->bhcj", qc, kc)
+            W = S_qk * jnp.exp(Dm - m_i[..., None])
+            num = jnp.einsum("bhcj,bhjd->bhcd", W, vc)
+            nvec = jnp.einsum("bhcj,bhjd->bhcd", jnp.exp(Dm - m_i[..., None]), kc)
+            # inter term (state from previous chunks)
+            w_in = jnp.exp(m_inter - m_i)                       # (B,h,c)
+            num = num + w_in[..., None] * jnp.einsum("bhcd,bhdv->bhcv", qc, C0)
+            nvec = nvec + w_in[..., None] * n0[:, :, None, :]
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhcd,bhcd->bhc", qc, nvec)),
+                              jnp.exp(-m_i))
+            y = num / den[..., None]
+            # ---- chunk-end state ----
+            F_tot = F[..., -1]                                  # (B,h)
+            lse = F_tot[..., None] - F + lic                    # log weight of each j at chunk end
+            m_end = jnp.maximum(m0 + F_tot, lse.max(-1))
+            wj = jnp.exp(lse - m_end[..., None])                # (B,h,c)
+            C1 = (jnp.exp(m0 + F_tot - m_end)[..., None, None] * C0
+                  + jnp.einsum("bhc,bhcd,bhcv->bhdv", wj, kc, vc))
+            n1 = (jnp.exp(m0 + F_tot - m_end)[..., None] * n0
+                  + jnp.einsum("bhc,bhcd->bhd", wj, kc))
+            return (C1, n1, m_end), y
+
+        chunk_fn = jax.checkpoint(chunk_fn)
+        C0 = jnp.zeros((B, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, h, dh), jnp.float32)
+        m0 = jnp.zeros((B, h), jnp.float32)
+        (C1, n1, m1), ys = jax.lax.scan(chunk_fn, (C0, n0, m0),
+                                        (qs, ks, vs, lis, lfs))
+        y = ys.transpose(1, 2, 0, 3, 4).reshape(B, h, S, dh)
+        new_state = None
+        if mode == "prefill" and state is not None:
+            new_state = {"C": C1, "n": n1, "m": m1}
+
+    y = y.transpose(0, 2, 1, 3).reshape(B, y.shape[2], di)
+    # per-channel "group norm" (rms over head dim folded into scale)
+    y = nn.norm_apply("rmsnorm", {"scale": p["out_scale"]}, y.astype(x.dtype))
+    out = y * jax.nn.silu(zb)
+    return nn.dense_apply(p["down"], out), new_state
+
+
+# ================================================================ sLSTM ==
+def slstm_init(rng, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    r = jax.random.split(rng, 4)
+    dt = cfg.param_dtype
+    pf = max(1, int(d * 4 / 3) // 64 * 64)
+    return {
+        "wx": nn.dense_init(r[0], d, 4 * d, bias=True, dtype=dt),
+        # recurrent weights, block-diagonal per head: (h, dh, 4*dh)
+        "rh": (jax.random.normal(r[1], (h, dh, 4 * dh), jnp.float32)
+               * dh ** -0.5).astype(jnp.float32),
+        "ffn": nn.ffn_init(r[2], "swiglu", d, pf, dtype=dt),
+        "ffn_norm": nn.norm_init(cfg.norm, d, dt),
+    }
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), dtype), "n": jnp.ones((batch, d), dtype),
+            "m": jnp.zeros((batch, d), dtype), "h": jnp.zeros((batch, d), dtype)}
+
+
+def slstm_apply(p, x, *, cfg: ArchConfig, mode: str, state=None, **_):
+    B, S, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    gx_all = nn.dense_apply(p["wx"], x).astype(jnp.float32)    # (B,S,4d)
+
+    def step(carry, gx):
+        c0, n0, m0, h0 = carry                                  # (B,d) each
+        rec = jnp.einsum("bhd,hde->bhe",
+                         h0.reshape(B, h, dh), p["rh"]).reshape(B, 4 * d)
+        zi, ii, fi, oi = jnp.split(gx + rec, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        lf = jax.nn.log_sigmoid(fi)
+        m1 = jnp.maximum(lf + m0, ii)
+        i_g = jnp.exp(ii - m1)
+        f_g = jnp.exp(lf + m0 - m1)
+        c1 = f_g * c0 + i_g * z
+        n1 = jnp.maximum(f_g * n0 + i_g, jnp.exp(-m1))
+        h1 = o * c1 / n1
+        return (c1, n1, m1, h1), h1
+
+    if mode == "decode":
+        carry = (state["c"], state["n"], state["m"], state["h"])
+        carry, y = step(carry, gx_all[:, 0])
+        y = y[:, None, :]
+        new_state = {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    else:
+        chunk = min(cfg.ssm.chunk if cfg.ssm else 128, S)
+        assert S % chunk == 0
+        nc = S // chunk
+        gxs = gx_all.reshape(B, nc, chunk, 4 * d).transpose(1, 0, 2, 3)
+
+        def chunk_fn(carry, gxc):
+            carry, ys = jax.lax.scan(step, carry,
+                                     gxc.transpose(1, 0, 2))   # scan over c
+            return carry, ys.transpose(1, 0, 2)                 # (B,c,d)
+
+        chunk_fn = jax.checkpoint(chunk_fn)
+        z = jnp.zeros((B, d), jnp.float32)
+        carry = (z, jnp.ones((B, d), jnp.float32), z, z)
+        carry, ys = jax.lax.scan(chunk_fn, carry, gxs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+        new_state = None
+        if mode == "prefill" and state is not None:
+            new_state = {"c": carry[0], "n": carry[1], "m": carry[2],
+                         "h": carry[3]}
+
+    y = y.astype(x.dtype)
+    # post-recurrence gated FFN (xlstm sLSTM block, proj factor 4/3)
+    y = y + nn.ffn_apply("swiglu", p["ffn"],
+                         nn.norm_apply(cfg.norm, p["ffn_norm"], y))
+    return y, new_state

@@ -1,0 +1,88 @@
+"""Pure-JAX optimizers (no optax dependency): SGD(+momentum) and AdamW.
+
+State layout mirrors params so it inherits the FSDP sharding of the
+weights under pjit.  Moments are kept in fp32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]  # (grads, state, params, step)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def sgd(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+        momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lrv = lr_fn(step)
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda g: -lrv * g.astype(jnp.float32), grads)
+            return upd, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        upd = jax.tree.map(lambda m: -lrv * m, mu)
+        return upd, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lrv = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        upd = jax.tree.map(
+            lambda mh, vh, p: -lrv * (mh / (jnp.sqrt(vh) + eps)
+                                      + weight_decay * p.astype(jnp.float32)),
+            mhat, vhat, params)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

@@ -1,0 +1,3 @@
+from repro.serving.scheduler import BatchedServer, Request
+
+__all__ = ["BatchedServer", "Request"]

@@ -1,0 +1,129 @@
+"""Continuous-batching serving scheduler.
+
+A fixed pool of ``max_batch`` decode slots shares one batched KV cache.
+Incoming requests are prefilled one at a time (B=1) and their cache
+written into a free slot; every engine step decodes ALL active slots in
+one batched `serve_step` with **per-slot cache positions** (the (B,)
+``cache_pos`` path in `repro.models.attention`).  Finished requests
+free their slot immediately — new work joins mid-flight, vLLM-style,
+without waiting for the batch to drain.
+
+CPU/TPU-agnostic: everything is jit'd; slot bookkeeping is host-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the server:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _write_slot(batched, single, slot: int):
+    """Write a B=1 cache pytree into slot ``slot`` of the batched cache
+    (batch dim = 1: leaves are (G, B, ...))."""
+    def upd(b, s):
+        start = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
+    return jax.tree.map(upd, batched, single)
+
+
+class BatchedServer:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_len: int = 256, window: Optional[int] = None,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.B = max_batch
+        self.max_len = max_len
+        self.window = window
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = jnp.zeros((max_batch,), jnp.int32)   # per-slot decode pos
+        self.budget = [0] * max_batch
+        self.cache = model.cache_init(max_batch, max_len)
+        self._stats = {"steps": 0, "prefills": 0, "completed": 0}
+
+        def prefill_one(params, tokens, cache1):
+            logits, cache1, _ = model.apply(params, {"tokens": tokens},
+                                            mode="prefill", cache=cache1)
+            return logits[:, -1], cache1
+
+        def _decode(params, tok, cache, pos):
+            logits, cache, _ = model.apply(params, {"tokens": tok},
+                                           mode="decode", cache=cache,
+                                           cache_pos=pos,
+                                           window=window)
+            return logits[:, 0], cache
+
+        self._prefill = jax.jit(prefill_one)
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------- api --
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = int(req.prompt.shape[0])
+            assert plen + req.max_new_tokens <= self.max_len
+            cache1 = self.model.cache_init(1, self.max_len)
+            last_logits, cache1 = self._prefill(
+                self.params, req.prompt[None, :], cache1)
+            self.cache = _write_slot(self.cache, cache1, slot)
+            tok = int(jnp.argmax(last_logits[0]))
+            req.output.append(tok)
+            self.slots[slot] = req
+            self.pos = self.pos.at[slot].set(plen)
+            self.budget[slot] = req.max_new_tokens - 1
+            self._stats["prefills"] += 1
+
+    def step(self) -> int:
+        """One engine step: admit + one batched decode.  Returns the
+        number of active slots."""
+        self._admit()
+        active = [s for s in range(self.B) if self.slots[s] is not None]
+        if not active:
+            return 0
+        tok = jnp.array([[self.slots[s].output[-1]
+                          if self.slots[s] is not None else 0]
+                         for s in range(self.B)], jnp.int32)
+        logits, self.cache = self._decode(self.params, tok, self.cache,
+                                          self.pos)
+        self.pos = self.pos + 1
+        next_tok = jax.device_get(jnp.argmax(logits, -1))
+        self._stats["steps"] += 1
+        for s in active:
+            req = self.slots[s]
+            t = int(next_tok[s])
+            req.output.append(t)
+            self.budget[s] -= 1
+            if self.budget[s] <= 0 or (req.eos_id is not None
+                                       and t == req.eos_id):
+                req.done = True
+                self.slots[s] = None
+                self._stats["completed"] += 1
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> Dict[str, int]:
+        while (self.queue or any(self.slots)) and max_steps:
+            self.step()
+            max_steps -= 1
+        return dict(self._stats)

@@ -1,0 +1,5 @@
+from repro.sharding.context import (batch_axes, constrain, mesh_context,
+                                    current_mesh)
+from repro.sharding import rules
+
+__all__ = ["batch_axes", "constrain", "mesh_context", "current_mesh", "rules"]

@@ -1,0 +1,87 @@
+"""Mesh context for intermediate-activation sharding constraints.
+
+Model code never imports a mesh directly; it calls
+``constrain(x, "model", None, ...)`` with *logical* per-dim axis names.
+When a mesh context is active (set by the launcher / dry-run) this lowers
+to ``with_sharding_constraint``; in plain eager/smoke-test use it is a
+no-op, so the same model code runs on 1 CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, batch_axes_override: Optional[tuple] = None):
+    """``batch_axes_override``: replaces the default ("pod","data") batch
+    axes — used by the FedX pod-round lowering where the pod dim is a
+    vmap dim and per-pod code must shard batches over "data" only."""
+    prev = current_mesh()
+    prev_b = getattr(_state, "batch_override", None)
+    _state.mesh = mesh
+    _state.batch_override = batch_axes_override
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+        _state.batch_override = prev_b
+
+
+def _axis_size(axis, mesh) -> int:
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _filter(axis, mesh, dim_size) -> Union[None, str, tuple]:
+    """Drop axis names not in the mesh or that don't divide the dim."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        if not kept or dim_size % _axis_size(kept, mesh) != 0:
+            return None
+        return kept
+    if axis not in mesh.axis_names or dim_size % mesh.shape[axis] != 0:
+        return None
+    return axis
+
+
+def constrain(x, *axes):
+    """Apply a sharding constraint if a mesh context is active.
+
+    ``axes`` gives one logical axis (or tuple, or None) per array dim.
+    Names absent from the active mesh — or that don't divide the dim —
+    are silently dropped, so the same model code serves every mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = P(*[_filter(a, mesh, s) for a, s in zip(axes, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes():
+    """Logical axes the batch dim shards over (pod-major when present)."""
+    override = getattr(_state, "batch_override", None)
+    if override is not None:
+        return override
+    mesh = current_mesh()
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)

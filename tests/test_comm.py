@@ -1,0 +1,53 @@
+"""Property tests for the paper's communication-cost model (Eqs. 1-4)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.comm import (CommMeter, fedavg_total, fedx_total,
+                             fedavg_round_bytes, fedx_round_bytes,
+                             normalized_cost, SCORE_BYTES)
+
+
+@given(t=st.integers(1, 1000), c=st.floats(0.1, 1.0), n=st.integers(1, 100),
+       m=st.integers(1, 10**9))
+def test_eq1_fedavg_total(t, c, n, m):
+    assert fedavg_total(t, c, n, m) == t * int(max(c * n, 1)) * m
+
+
+@given(t=st.integers(1, 1000), n=st.integers(1, 100),
+       m=st.integers(1, 10**9))
+def test_eq2_fedx_total(t, n, m):
+    assert fedx_total(t, n, m) == t * (n * SCORE_BYTES + m)
+
+
+@given(n=st.integers(1, 100), m=st.integers(10**4, 10**9))
+def test_fedx_cheaper_than_fedavg_per_round_when_c1(n, m):
+    """With C=1 and more than one client, FedX always wins per round."""
+    if n >= 2:
+        assert fedx_round_bytes(n, m) < fedavg_round_bytes(1.0, n, m)
+
+
+@given(tx=st.integers(1, 100), tavg=st.integers(1, 100),
+       n=st.integers(2, 50), m=st.integers(10**5, 10**8))
+def test_eq4_simplification(tx, tavg, n, m):
+    """Eq. 3 with C=1 ~ Eq. 4 (T_X / (T_Avg * N)) when N*4 << M."""
+    full = normalized_cost(tx, n, m, tavg, c=1.0)
+    simplified = tx / (tavg * n)
+    assert abs(full - simplified) / simplified < 0.01
+
+
+def test_paper_headline_numbers():
+    """FedBWO 4 rounds vs FedAvg 30 rounds, N=10 -> ~1.3% (paper §IV-D)."""
+    cost = normalized_cost(4, 10, 10**7, 30, c=1.0)
+    assert 0.012 < cost < 0.0140
+    # FedPSO 29 rounds -> ~9.7%
+    assert 0.09 < normalized_cost(29, 10, 10**7, 30) < 0.105
+    # FedGWO 25 rounds -> ~8.3%
+    assert 0.08 < normalized_cost(25, 10, 10**7, 30) < 0.09
+
+
+def test_meter_round_accounting():
+    meter = CommMeter(model_bytes=1000, n_clients=10)
+    meter.record_fedx_round()
+    meter.record_fedavg_round(5)
+    assert meter.uplink == [10 * SCORE_BYTES + 1000, 5 * 1000]
+    assert meter.total_uplink == 40 + 1000 + 5000

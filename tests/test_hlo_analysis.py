@@ -1,0 +1,68 @@
+"""Unit tests for the loop-corrected mini HLO cost model."""
+import textwrap
+
+from repro.launch.hlo_analysis import (analyze, parse_module, shape_bytes,
+                                       _multipliers)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step, entry_computation_layout={()->f32[8,16]{1,0}}
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %g0 = s32[] get-tuple-element(%p), index=0
+      %g1 = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %dot.1 = f32[8,16]{1,0} dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={{0,1,2,3}}, to_apply=%add
+      ROOT %t = (s32[], f32[8,16]) tuple(%g0, %ar)
+    }
+
+    %cond (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main () -> f32[8,16] {
+      %w = f32[16,16]{1,0} constant({...})
+      %init = (s32[], f32[8,16]) tuple()
+      %wl = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%wl), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]") == 8 * 16 * 4
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert shape_bytes("pred[10]") == 10
+
+
+def test_parse_module_structure():
+    comps = parse_module(HLO)
+    assert set(comps) >= {"body", "cond", "add", "main"}
+    ops = [i.op for i in comps["body"].instrs]
+    assert "dot" in ops and "all-reduce" in ops
+
+
+def test_trip_count_multiplies_loop_body():
+    cost = analyze(HLO, total_devices=4)
+    # dot: 2 * (8*16) * K=16 flops, x5 trips
+    assert cost.dot_flops == 2 * 8 * 16 * 16 * 5
+    # all-reduce: ring 2*(n-1)/n * bytes, group 4, x5
+    expected = 2 * (4 - 1) / 4 * (8 * 16 * 4) * 5
+    assert abs(cost.collective_link_bytes - expected) < 1e-6
+
+
+def test_multipliers_entry_is_one():
+    comps = parse_module(HLO)
+    mult = _multipliers(comps)
+    assert mult["main"] == 1.0
+    assert mult["body"] == 5.0

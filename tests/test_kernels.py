@@ -1,0 +1,117 @@
+"""Pallas kernel allclose sweeps against the pure-jnp oracles
+(interpret=True — the kernel body itself runs on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bwo_evolve.ops import bwo_evolve, bwo_evolve_reference
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+# ----------------------------------------------------------- bwo_evolve --
+@pytest.mark.parametrize("P,D", [(4, 128), (8, 100), (16, 1000), (6, 4097)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bwo_evolve_matches_ref(P, D, dtype):
+    rng = jax.random.PRNGKey(P * 1000 + D)
+    pop = jax.random.normal(rng, (P, D), dtype)
+    fit = jax.random.uniform(jax.random.PRNGKey(1), (P,))
+    got = bwo_evolve(pop, fit, rng, interpret=True)
+    want = bwo_evolve_reference(pop, fit, rng)
+    assert got.dtype == pop.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("pm_gene,mut_scale", [(0.0, 0.1), (1.0, 0.0),
+                                               (0.5, 0.2)])
+def test_bwo_evolve_params(pm_gene, mut_scale):
+    rng = jax.random.PRNGKey(7)
+    pop = jax.random.normal(rng, (8, 256))
+    fit = jnp.arange(8.0)
+    got = bwo_evolve(pop, fit, rng, pm_gene=pm_gene, mut_scale=mut_scale,
+                     interpret=True)
+    want = bwo_evolve_reference(pop, fit, rng, pm_gene=pm_gene,
+                                mut_scale=mut_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ flash attention --
+CASES = [
+    # B, Sq, Sk, H, KV, hd, causal, window
+    (2, 256, 256, 4, 2, 64, True, None),
+    (1, 512, 512, 4, 4, 128, True, 128),
+    (2, 128, 128, 8, 1, 32, False, None),
+    (1, 300, 300, 2, 2, 80, True, None),     # non-multiple seq + odd hd
+    (1, 256, 256, 4, 4, 128, True, 64),
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd,causal,window", CASES)
+def test_flash_attention_matches_ref(B, Sq, Sk, H, KV, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + hd), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=128, bk=128, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 128), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 256, 2, 128), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 256, 2, 128), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------------- ssm scan --
+@pytest.mark.parametrize("B,S,D,N,with_h0", [
+    (2, 128, 64, 16, False),
+    (1, 64, 256, 8, True),
+    (2, 96, 32, 16, False),
+    (1, 200, 48, 4, True),    # odd seq -> chunk fallback
+])
+def test_ssm_scan_matches_ref(B, S, D, N, with_h0):
+    ks = jax.random.split(jax.random.PRNGKey(S * D), 6)
+    x = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    h0 = jax.random.normal(ks[5], (B, D, N)) if with_h0 else None
+    y1, h1 = ssm_scan(x, dt, A, Bc, Cc, h0, interpret=True)
+    y2, h2 = ssm_scan_ref(x, dt, A, Bc, Cc, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_chunk_invariance():
+    """Different chunk sizes must give identical results."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, D, N = 1, 128, 32, 8
+    x = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    y1, _ = ssm_scan(x, dt, A, Bc, Cc, chunk=32, interpret=True)
+    y2, _ = ssm_scan(x, dt, A, Bc, Cc, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)

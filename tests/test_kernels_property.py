@@ -1,0 +1,69 @@
+"""Hypothesis property sweeps: randomized shapes/flags for the Pallas
+kernels against their oracles (interpret mode)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.kernels.bwo_evolve.ops import bwo_evolve, bwo_evolve_reference
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@given(
+    seq=st.sampled_from([64, 96, 128, 192]),
+    h=st.sampled_from([1, 2, 4]),
+    rep=st.sampled_from([1, 2]),
+    hd=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    windowed=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(seq, h, rep, hd, causal, windowed, seed):
+    H = h * rep
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, seq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (1, seq, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (1, seq, h, hd), jnp.float32)
+    window = seq // 2 if windowed else None
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(P=st.integers(3, 12), D=st.sampled_from([64, 200, 513]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_bwo_evolve_property(P, D, seed):
+    rng = jax.random.PRNGKey(seed)
+    pop = jax.random.normal(rng, (P, D))
+    fit = jax.random.uniform(jax.random.PRNGKey(seed + 1), (P,))
+    got = bwo_evolve(pop, fit, rng, interpret=True)
+    want = bwo_evolve_reference(pop, fit, rng)
+    assert got.shape == (P, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(S=st.sampled_from([32, 64, 96]), D=st.sampled_from([16, 64]),
+       N=st.sampled_from([4, 16]), seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_ssm_scan_property(S, D, N, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (1, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, S, D))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bc = jax.random.normal(ks[3], (1, S, N))
+    Cc = jax.random.normal(ks[4], (1, S, N))
+    y1, h1 = ssm_scan(x, dt, A, Bc, Cc, interpret=True)
+    y2, h2 = ssm_scan_ref(x, dt, A, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-4, atol=2e-4)

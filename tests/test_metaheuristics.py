@@ -1,0 +1,79 @@
+"""Property + behaviour tests for BWO/PSO/GWO/SCA."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.metaheuristics import REGISTRY, bwo
+from repro.metaheuristics.base import best_member
+
+SPHERE_OPT = 1.5
+
+
+def sphere(pop):
+    return jnp.sum((pop - SPHERE_OPT) ** 2, axis=-1)
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_population_shape_preserved(name):
+    mh = REGISTRY[name]()
+    rng = jax.random.PRNGKey(0)
+    x0 = jnp.zeros((16,))
+    state = mh.init(rng, x0, 8, sphere)
+    for i in range(3):
+        state = mh.step(jax.random.PRNGKey(i), state, sphere)
+        assert state["pop"].shape == (8, 16)
+        assert state["fit"].shape == (8,)
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_best_fitness_monotone_nonincreasing(name):
+    """Elitism: the incumbent best never gets worse."""
+    mh = REGISTRY[name]()
+    rng = jax.random.PRNGKey(1)
+    state = mh.init(rng, jnp.ones(8) * 4.0, 8, sphere)
+    prev = float(state["fit"].min())
+    for i in range(10):
+        state = mh.step(jax.random.PRNGKey(100 + i), state, sphere)
+        cur = float(state["fit"].min())
+        assert cur <= prev + 1e-6, (name, i, prev, cur)
+        prev = cur
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_converges_on_sphere(name):
+    # start away from zero: all four heuristics use *relative* move
+    # scales (they refine post-SGD weights in FL, not box-search)
+    mh = REGISTRY[name]()
+    state = mh.init(jax.random.PRNGKey(2), jnp.ones(4) * 4.0, 12, sphere)
+    f0 = float(state["fit"].min())
+    for i in range(25):
+        state = mh.step(jax.random.PRNGKey(i), state, sphere)
+    x, f = best_member(state)
+    assert float(f) < f0 * 0.9, (name, f0, float(f))
+
+
+@given(pm=st.floats(0.05, 0.95), pc=st.floats(0.05, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_bwo_cannibalism_keeps_elite(pm, pc):
+    mh = bwo(pm=pm, pc=pc)
+    state = mh.init(jax.random.PRNGKey(3), jnp.ones(6), 6, sphere)
+    elite = float(state["fit"].min())
+    state = mh.step(jax.random.PRNGKey(4), state, sphere)
+    assert float(state["fit"].min()) <= elite + 1e-6
+    # fitness array is consistent with the population
+    np.testing.assert_allclose(np.asarray(sphere(state["pop"])),
+                               np.asarray(state["fit"]), rtol=1e-5)
+
+
+def test_bwo_pallas_path_matches_semantics():
+    """use_pallas=True (interpret on CPU) still converges and keeps shape."""
+    mh = bwo(use_pallas=True)
+    state = mh.init(jax.random.PRNGKey(5), jnp.zeros(256), 8, sphere)
+    f0 = float(state["fit"].min())
+    for i in range(10):
+        state = mh.step(jax.random.PRNGKey(i), state, sphere)
+    assert state["pop"].shape == (8, 256)
+    assert float(state["fit"].min()) <= f0
