@@ -5,10 +5,15 @@ Fig. 4  accuracy comparison      -> bench_accuracy
 Fig. 5  loss comparison          -> bench_loss
 Fig. 6  communication cost       -> bench_comm_cost (Eqs. 1-4)
 Fig. 7  execution time           -> bench_exec_time
+plus    round-engine comparison  -> bench_round_engine (sequential vs
+                                    batched one-dispatch rounds)
 
 Scale knobs (1-core CPU container): REPRO_BENCH_TRAIN, REPRO_BENCH_ROUNDS,
-REPRO_BENCH_CLIENTS.  The protocol/accounting is exact regardless of
-scale; only absolute accuracies shift.
+REPRO_BENCH_CLIENTS, REPRO_BENCH_EPOCHS, REPRO_BENCH_ENGINE
+(auto|batched|sequential).  The protocol/accounting is exact regardless
+of scale; only absolute accuracies shift.  Cached results in
+results/bench/fl_runs.json are invalidated automatically when these
+knobs change.
 """
 from __future__ import annotations
 
@@ -23,6 +28,10 @@ from repro.core import (ClientHP, Server, StopConditions, get_strategy,
                         normalized_cost, run_federated)
 from repro.data import (client_batches, cnn_task, make_cifar_like,
                         partition_iid)
+
+# engine selection for the figure runs: "auto" routes rounds through the
+# batched one-dispatch engine (repro.core.engine) when client data stacks
+ENGINE = os.environ.get("REPRO_BENCH_ENGINE", "auto")
 
 # defaults sized for the 1-core CPU container (~20 min total); scale up
 # with the env knobs for a fuller reproduction
@@ -41,16 +50,36 @@ FEDAVG_CS = [1.0, 0.1]
 _cache: Dict[str, dict] = {}
 
 
+def _bench_config() -> Dict[str, int]:
+    """The knobs a cached run must match to be reusable."""
+    return {"train": N_TRAIN, "test": N_TEST, "rounds": ROUNDS,
+            "clients": N_CLIENTS, "batch": BATCH, "epochs": LOCAL_EPOCHS}
+
+
+def _load_cached_runs(disk: str):
+    """Return cached runs only when they were produced under the current
+    REPRO_BENCH_* config (older config-less caches are treated stale)."""
+    with open(disk) as f:
+        payload = json.load(f)
+    if payload.get("config") != _bench_config():
+        print(f"  [fl_bench] cache {disk} stale "
+              f"(config {payload.get('config')} != {_bench_config()}); "
+              "re-running", flush=True)
+        return None
+    return payload["runs"]
+
+
 def _run_all() -> Dict[str, dict]:
     if _cache:
         return _cache
     # reuse a previous run's results if present (delete
-    # results/bench/fl_runs.json to force re-training)
+    # results/bench/fl_runs.json or set REPRO_BENCH_FRESH to re-train)
     disk = "results/bench/fl_runs.json"
     if os.path.exists(disk) and not os.environ.get("REPRO_BENCH_FRESH"):
-        with open(disk) as f:
-            _cache.update(json.load(f))
-        return _cache
+        cached = _load_cached_runs(disk)
+        if cached is not None:
+            _cache.update(cached)
+            return _cache
     rng = jax.random.PRNGKey(42)
     train, test = make_cifar_like(rng, N_TRAIN, N_TEST)
     clients = client_batches(
@@ -66,9 +95,13 @@ def _run_all() -> Dict[str, dict]:
             key = name if name != "fedavg" else f"fedavg_c{c}"
             t0 = time.perf_counter()
             server = Server(task, get_strategy(name, client_ratio=c), hp,
-                            clients, jax.random.PRNGKey(7))
+                            clients, jax.random.PRNGKey(7), engine=ENGINE)
             logs = run_federated(server, test, stop)
+            jax.block_until_ready(server.global_params)
             wall = time.perf_counter() - t0
+            # round 0 pays XLA compilation; steady state is the rest
+            steady = ([l.round_time_s for l in logs[1:]]
+                      or [logs[0].round_time_s])
             runs[key] = {
                 "rounds": len(logs),
                 "acc": [l.test_acc for l in logs],
@@ -76,16 +109,21 @@ def _run_all() -> Dict[str, dict]:
                 "final_acc": logs[-1].test_acc,
                 "final_loss": logs[-1].test_loss,
                 "wall_s": wall,
+                "compile_round_s": logs[0].round_time_s,
+                "steady_round_s": sum(steady) / len(steady),
+                "engine": server.engine,
                 "model_bytes": server.meter.model_bytes,
                 "uplink_bytes": server.meter.total_uplink,
             }
             print(f"  [{key}] rounds={len(logs)} acc={logs[-1].test_acc:.3f} "
-                  f"loss={logs[-1].test_loss:.3f} wall={wall:.1f}s",
+                  f"loss={logs[-1].test_loss:.3f} wall={wall:.1f}s "
+                  f"(first={logs[0].round_time_s:.1f}s "
+                  f"steady={runs[key]['steady_round_s']:.2f}s/round)",
                   flush=True)
     _cache.update(runs)
     os.makedirs("results/bench", exist_ok=True)
     with open("results/bench/fl_runs.json", "w") as f:
-        json.dump(runs, f, indent=1)
+        json.dump({"config": _bench_config(), "runs": runs}, f, indent=1)
     return runs
 
 
@@ -154,3 +192,62 @@ def bench_exec_time() -> List[tuple]:
     mx = max(walls.values())
     return [(f"fig7_exec_time/{k}", w * 1e6, round(w / mx, 4))
             for k, w in walls.items()]
+
+
+def _time_engines(task, clients, hp, label, steady_rounds) -> List[tuple]:
+    rows, steady = [], {}
+    for engine in ("sequential", "batched"):
+        server = Server(task, get_strategy("fedbwo"), hp, clients,
+                        jax.random.PRNGKey(7), engine=engine)
+        t0 = time.perf_counter()
+        server.run_round()
+        jax.block_until_ready(server.global_params)
+        first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(steady_rounds):
+            server.run_round()
+        jax.block_until_ready(server.global_params)
+        steady[engine] = (time.perf_counter() - t0) / steady_rounds
+        rows.append((f"round_engine/{label}_{engine}_first", first * 1e6,
+                     f"clients={N_CLIENTS}"))
+        rows.append((f"round_engine/{label}_{engine}_steady",
+                     steady[engine] * 1e6,
+                     f"clients={N_CLIENTS},rounds={steady_rounds}"))
+        print(f"  [engine:{label}/{engine}] first={first:.1f}s "
+              f"steady={steady[engine]:.2f}s/round", flush=True)
+    rows.append((f"round_engine/{label}_steady_speedup",
+                 steady["batched"] * 1e6,
+                 round(steady["sequential"] / steady["batched"], 4)))
+    return rows
+
+
+def bench_round_engine() -> List[tuple]:
+    """Tentpole benchmark: sequential per-client jit loop vs the batched
+    one-dispatch-per-round engine (repro.core.engine).
+
+    Default workload is FedBWO on the dense ``mlp_task`` (the original
+    FedAvg paper's 2NN on the same CIFAR-like images) — the regime the
+    batched engine targets, where it streams all clients through one
+    ``lax.scan`` dispatch.  The paper CNN is opt-in via
+    REPRO_BENCH_ENGINE_CNN=1: on XLA:CPU conv tasks run faster as
+    per-client dispatches under every batched traversal (DESIGN.md §4
+    records the measurements), and engine="batched" forces the
+    comparison anyway at real wall-clock cost.
+
+    Derived column of the ``*_steady_speedup`` rows is
+    sequential_steady / batched_steady (>1 means batched wins)."""
+    from repro.data import mlp_task
+
+    steady_rounds = int(os.environ.get("REPRO_BENCH_ENGINE_ROUNDS", 3))
+    rng = jax.random.PRNGKey(0)
+    train, _ = make_cifar_like(rng, N_TRAIN, 16)
+    clients = client_batches(
+        partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), BATCH)
+    hp = ClientHP(local_epochs=LOCAL_EPOCHS, lr=0.0025, mh_pop=4,
+                  mh_generations=2)
+    rows = _time_engines(mlp_task(), clients, hp, "fedbwo_mlp",
+                         steady_rounds)
+    if os.environ.get("REPRO_BENCH_ENGINE_CNN"):
+        rows += _time_engines(cnn_task(), clients, hp, "fedbwo_cnn",
+                              steady_rounds)
+    return rows

@@ -16,12 +16,16 @@ from repro.kernels.ssm_scan.ops import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
 
-def _time(fn, *args, n=5) -> float:
-    fn(*args)                      # compile
+def _time(fn, *args, n=5):
+    """(first_call_us, steady_us): first call pays compilation; both are
+    blocked on the result before the timer stops."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    first = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6   # us
+    return first, (time.perf_counter() - t0) / n * 1e6   # us
 
 
 def bench_kernels() -> List[tuple]:
@@ -32,8 +36,10 @@ def bench_kernels() -> List[tuple]:
     P, D = 8, 1 << 16
     pop = jax.random.normal(rng, (P, D))
     fit = jax.random.uniform(rng, (P,))
-    us_ref = _time(lambda: bwo_evolve_reference(pop, fit, rng))
+    us_first, us_ref = _time(lambda: bwo_evolve_reference(pop, fit, rng))
     rows.append(("kernel/bwo_evolve_ref_jnp", us_ref, f"P={P},D={D}"))
+    rows.append(("kernel/bwo_evolve_ref_jnp_compile", us_first,
+                 f"P={P},D={D}"))
     # HBM-traffic model: fused reads 4 x PD x 4B, unfused ~7 x PD x 4B
     rows.append(("kernel/bwo_evolve_traffic_model", us_ref,
                  "fused=4PD vs unfused=7PD bytes -> 1.75x HBM win"))
@@ -42,8 +48,11 @@ def bench_kernels() -> List[tuple]:
     q = jax.random.normal(rng, (1, 512, 4, 64))
     k = jax.random.normal(rng, (1, 512, 2, 64))
     v = jax.random.normal(rng, (1, 512, 2, 64))
-    us_ref = _time(lambda: flash_attention_ref(q, k, v, causal=True))
+    us_first, us_ref = _time(lambda: flash_attention_ref(q, k, v,
+                                                         causal=True))
     rows.append(("kernel/flash_attention_ref_jnp", us_ref, "B1 S512 H4 d64"))
+    rows.append(("kernel/flash_attention_ref_jnp_compile", us_first,
+                 "B1 S512 H4 d64"))
 
     # ssm scan: pallas-interpret vs lax.scan reference
     B, S, Dm, N = 2, 256, 64, 16
@@ -53,6 +62,8 @@ def bench_kernels() -> List[tuple]:
     A = -jnp.exp(jax.random.normal(ks[2], (Dm, N)) * 0.3)
     Bc = jax.random.normal(ks[3], (B, S, N))
     Cc = jax.random.normal(ks[4], (B, S, N))
-    us_ref = _time(lambda: ssm_scan_ref(x, dt, A, Bc, Cc))
+    us_first, us_ref = _time(lambda: ssm_scan_ref(x, dt, A, Bc, Cc))
     rows.append(("kernel/ssm_scan_ref_jnp", us_ref, f"B{B} S{S} D{Dm} N{N}"))
+    rows.append(("kernel/ssm_scan_ref_jnp_compile", us_first,
+                 f"B{B} S{S} D{Dm} N{N}"))
     return rows

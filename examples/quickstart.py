@@ -20,13 +20,25 @@ train, test = make_cifar_like(rng, n_train=600, n_test=200)
 clients = client_batches(
     partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), batch_size=10)
 
+# ``engine="auto"`` compiles the whole round (all clients + server
+# argmin/averaging) into ONE device dispatch whenever the client
+# datasets stack AND the batched traversal is a measured win: on CPU,
+# conv tasks like this CNN stay on the sequential per-client loop
+# (XLA:CPU conv thunks beat every batched mode — DESIGN.md §4) while
+# dense tasks (repro.data.mlp_task) batch via an O(2 x model)
+# streaming lax.scan.  ``vectorize`` picks the client-axis traversal
+# inside the batched engine: "auto" = scan on CPU, vmap on TPU/GPU;
+# "unroll" trades compile time for straight-line code.
 server = Server(
     task=cnn_task(),
     strategy=get_strategy("fedbwo"),
-    hp=ClientHP(local_epochs=1, lr=0.0025, mh_pop=4, mh_generations=2),
+    hp=ClientHP(local_epochs=1, lr=0.0025, mh_pop=4, mh_generations=2,
+                vectorize="auto"),
     client_data=clients,
     rng=jax.random.PRNGKey(7),
+    engine="auto",
 )
+print(f"round engine = {server.engine}")
 
 print(f"FedBWO | {N_CLIENTS} clients | model = "
       f"{server.meter.model_bytes / 1e6:.1f} MB")

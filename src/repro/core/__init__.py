@@ -4,10 +4,15 @@ FedAvg/FedPSO/FedGWO/FedSCA baselines."""
 from repro.core.client import ClientHP, Task, make_client_update
 from repro.core.comm import (CommMeter, fedavg_total, fedx_total,
                              normalized_cost, SCORE_BYTES)
+from repro.core.engine import (BatchedRoundEngine, make_batched_fedavg_round,
+                               make_batched_fedx_round, resolve_vectorize,
+                               stack_clients)
 from repro.core.protocol import RoundLog, StopConditions, run_federated
-from repro.core.server import Server, Strategy, get_strategy
+from repro.core.server import ENGINES, Server, Strategy, get_strategy
 
 __all__ = ["ClientHP", "Task", "make_client_update", "CommMeter",
            "fedavg_total", "fedx_total", "normalized_cost", "SCORE_BYTES",
-           "RoundLog", "StopConditions", "run_federated", "Server",
-           "Strategy", "get_strategy"]
+           "BatchedRoundEngine", "make_batched_fedavg_round",
+           "make_batched_fedx_round", "resolve_vectorize", "stack_clients",
+           "RoundLog", "StopConditions", "run_federated", "ENGINES",
+           "Server", "Strategy", "get_strategy"]

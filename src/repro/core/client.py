@@ -45,6 +45,11 @@ class ClientHP:
     # FedProx proximal term (Li et al. 2020, paper's related work [18]):
     # local objective += (mu/2) * ||w - w_global||^2.  0 disables.
     prox_mu: float = 0.0
+    # How the batched round engine (repro.core.engine) traverses the
+    # client axis: "vmap" | "scan" | "unroll" | "auto" (scan on CPU,
+    # vmap elsewhere).  See engine.resolve_vectorize and DESIGN.md §4
+    # for the measured tradeoffs.
+    vectorize: str = "auto"
     # NOTE on ``unroll``: XLA:CPU executes convolutions inside while
     # loops (lax.scan / fori_loop) ~20x slower than unrolled (no fast
     # conv thunk in loop bodies).  Client loops here are short and

@@ -11,24 +11,19 @@ slices of the ``clients`` (or ``pod``) axis, local training runs with
 JAX has no dynamic-source broadcast, so the winner fetch is
 ``psum(where(my_id == winner, w, 0))`` — physically an all-reduce of M
 bytes, logically the paper's single model transfer (see DESIGN.md §3).
+
+The round builders themselves live in :mod:`repro.core.engine`; the
+mesh schedules here are the sharded placement of the same round-builder
+that powers the single-host batched engine.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from jax.sharding import Mesh
 
-import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.flatten_util import ravel_pytree
-from jax.sharding import Mesh, PartitionSpec as P
-
-from repro.core.client import ClientHP, Task, make_client_update
+from repro.core.client import ClientHP, Task
+from repro.core.engine import (make_sharded_fedavg_round,
+                               make_sharded_fedx_round)
 from repro.metaheuristics import Metaheuristic
-
-
-def _squeeze0(tree):
-    return jax.tree.map(lambda a: a[0], tree)
 
 
 def make_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
@@ -39,46 +34,10 @@ def make_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
     client_data: pytree with leading (N, ...) dims, sharded over ``axis``.
     rng_keys:    (N, 2) uint32, sharded over ``axis``.
     """
-    client_update = make_client_update(task, hp, mh)
-
-    def per_shard(params, data, keys):
-        data = _squeeze0(data)
-        rng = jax.random.wrap_key_data(keys[0], impl="threefry2x32")
-        score, new_params = client_update(params, data, rng)
-        scores = jax.lax.all_gather(score, axis)            # N x 4 bytes
-        winner = jnp.argmin(scores)
-        me = jax.lax.axis_index(axis)
-        mask = (me == winner).astype(jnp.float32)
-        flat, unravel = ravel_pytree(new_params)
-        best = jax.lax.psum(flat * mask, axis)              # winner fetch
-        return unravel(best), scores
-
-    fn = shard_map(per_shard, mesh=mesh,
-                   in_specs=(P(), P(axis), P(axis)),
-                   out_specs=(P(), P()),
-                   check_rep=False)
-    return jax.jit(fn)
+    return make_sharded_fedx_round(task, hp, mh, mesh, axis)
 
 
 def make_fedavg_round(task: Task, hp: ClientHP, mesh: Mesh,
                       axis: str = "clients"):
     """Synchronous FedAvg: every round all-reduces the full model."""
-    client_update = make_client_update(task, hp, mh=None)
-
-    def per_shard(params, data, keys):
-        data = _squeeze0(data)
-        rng = jax.random.wrap_key_data(keys[0], impl="threefry2x32")
-        score, new_params = client_update(params, data, rng)
-        n = jax.lax.psum(1.0, axis)
-        avg = jax.tree.map(
-            lambda w: jax.lax.psum(w.astype(jnp.float32), axis) / n,
-            new_params)                                     # M bytes x N
-        scores = jax.lax.all_gather(score, axis)
-        return jax.tree.map(lambda a, ref: a.astype(ref.dtype),
-                            avg, new_params), scores
-
-    fn = shard_map(per_shard, mesh=mesh,
-                   in_specs=(P(), P(axis), P(axis)),
-                   out_specs=(P(), P()),
-                   check_rep=False)
-    return jax.jit(fn)
+    return make_sharded_fedavg_round(task, hp, mesh, axis)

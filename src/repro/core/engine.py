@@ -1,0 +1,325 @@
+"""Batched FL round engine: one jit'd device dispatch per round.
+
+The sequential ``Server`` loop dispatches one jit call per client and
+synchronizes with the host in between; for FedX it also materializes a
+full model copy per client before the argmin.  This module compiles the
+*entire round* — every selected client's local update plus the server
+aggregation — into a single XLA program:
+
+* client datasets are stacked along a leading ``(n_clients, ...)`` axis
+  (:func:`stack_clients`);
+* ``make_client_update`` runs across that axis under ``jax.vmap``, a
+  ``lax.scan`` device loop, or a Python-unrolled streaming loop,
+  selected by the ``vectorize`` knob on :class:`~repro.core.client.
+  ClientHP` (see :func:`resolve_vectorize` for the CPU/TPU tradeoff);
+* the FedX argmin runs **on device** and the winner's weights are
+  selected with a ``jnp.where`` streaming reduction — the scan carry
+  holds only ``(best_score, best_params)``, so peak weight memory is
+  O(2 x model) instead of O(n_clients x model);
+* FedAvg accumulates a running parameter sum in the carry the same way,
+  and the round function donates the incoming global-params buffer
+  (``donate_argnums``) on backends that support aliasing.
+
+``repro.core.distributed`` builds the same per-client update into
+shard_map collective schedules; its round builders live here
+(:func:`make_sharded_fedx_round` / :func:`make_sharded_fedavg_round`)
+so the single-host batched engine and the mesh engine are two
+placements of one round-builder.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.client import ClientHP, Task, make_client_update
+from repro.metaheuristics import Metaheuristic
+
+VECTORIZE_MODES = ("auto", "vmap", "scan", "unroll")
+
+
+def resolve_vectorize(mode: str, backend: Optional[str] = None) -> str:
+    """Resolve the ``vectorize`` knob to a concrete client-axis strategy.
+
+    ``vmap``   — one batched program over the client axis.  Fastest on
+                 TPU/GPU, but vmapping *conv weights* lowers to grouped
+                 convolutions that are pathologically slow on XLA:CPU.
+    ``scan``   — ``lax.scan`` device loop, O(2 x model) weight memory,
+                 compact compile.  Measured fastest batched mode on CPU
+                 for dense models (GEMMs are loop-body-safe); XLA:CPU
+                 lacks fast conv thunks inside loop bodies, so conv
+                 models are ~5x slower here (DESIGN.md §4).
+    ``unroll`` — the scan unrolled in Python: still one dispatch and
+                 the same streaming reduction.  Keeps CPU convs on the
+                 fast conv thunk, but compile time grows ~linearly with
+                 n_clients and the measured steady state still trails
+                 the sequential loop for conv models.
+    ``auto``   — ``scan`` on CPU, ``vmap`` elsewhere.  (Whether to
+                 batch *at all* on CPU is the server's engine="auto"
+                 decision, which checks the task for convolutions —
+                 see :func:`task_uses_conv`.)
+    """
+    if mode not in VECTORIZE_MODES:
+        raise ValueError(f"vectorize={mode!r} not in {VECTORIZE_MODES}")
+    if mode != "auto":
+        return mode
+    backend = backend or jax.default_backend()
+    return "scan" if backend == "cpu" else "vmap"
+
+
+_CONV_PRIMITIVES = ("conv_general_dilated",)
+
+
+def _jaxpr_has_primitive(jaxpr, names) -> bool:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in names:
+            return True
+        for val in eqn.params.values():
+            subs = val if isinstance(val, (tuple, list)) else (val,)
+            for sub in subs:
+                closed = getattr(sub, "jaxpr", None)
+                if closed is not None and hasattr(closed, "eqns"):
+                    if _jaxpr_has_primitive(closed, names):
+                        return True
+                elif hasattr(sub, "eqns"):
+                    if _jaxpr_has_primitive(sub, names):
+                        return True
+    return False
+
+
+def task_uses_conv(task: Task, params, sample_batch) -> bool:
+    """Abstractly trace ``task.loss_fn`` and report whether it lowers to
+    convolutions.  Drives the CPU engine="auto" decision: XLA:CPU runs
+    convolutions slower under every batched traversal (grouped convs
+    under vmap, no fast conv thunk in loop bodies, and measured ~1.5x
+    slower even fully unrolled) than as per-client dispatches, so conv
+    tasks stay on the sequential engine on CPU.  Returns True (the
+    conservative answer) when the trace fails.
+    """
+    try:
+        jaxpr = jax.make_jaxpr(task.loss_fn)(params, sample_batch)
+        return _jaxpr_has_primitive(jaxpr.jaxpr, _CONV_PRIMITIVES)
+    except Exception:
+        return True
+
+
+def stack_clients(client_data: Sequence[Any]):
+    """Stack per-client pytrees along a new leading client axis.
+
+    Returns ``None`` when the clients are not stackable (ragged shapes
+    from e.g. a Dirichlet split, or mismatched structures) — callers
+    fall back to the sequential engine.
+    """
+    if not client_data:
+        return None
+    ref = jax.tree.structure(client_data[0])
+    ref_leaves = jax.tree.leaves(client_data[0])
+    for d in client_data[1:]:
+        if jax.tree.structure(d) != ref:
+            return None
+        leaves = jax.tree.leaves(d)
+        if any(a.shape != b.shape or a.dtype != b.dtype
+               for a, b in zip(leaves, ref_leaves)):
+            return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *client_data)
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _donate_argnums(enabled: bool = True):
+    # buffer donation is a no-op (plus a warning per call) on CPU
+    return (0,) if enabled and jax.default_backend() != "cpu" else ()
+
+
+# ------------------------------------------------------------ batched --
+def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
+                            vectorize: str = "auto", donate: bool = True):
+    """Returns jit'd ``round_fn(global_params, data, keys) ->
+    (best_params, scores, best_idx)``.
+
+    ``data``: client datasets stacked to ``(n_clients, ...)`` leaves.
+    ``keys``: ``(n_clients, 2)`` uint32 PRNG keys, one per client.
+    """
+    mode = resolve_vectorize(vectorize)
+    client_update = make_client_update(task, hp, mh)
+
+    if mode == "vmap":
+        def round_fn(global_params, data, keys):
+            scores, new = jax.vmap(client_update, in_axes=(None, 0, 0))(
+                global_params, data, keys)
+            best = jnp.argmin(scores)
+            winner = jax.tree.map(lambda a: a[best], new)
+            return winner, scores, best
+    else:
+        def round_fn(global_params, data, keys):
+            n = keys.shape[0]
+
+            def step(carry, xs):
+                best_fit, best_params = carry
+                d, k = xs
+                score, params = client_update(global_params, d, k)
+                take = score < best_fit
+                # streaming winner reduction: carry holds one model
+                best_params = _tree_where(take, params, best_params)
+                best_fit = jnp.minimum(score, best_fit)
+                return (best_fit, best_params), score
+
+            init = (jnp.asarray(jnp.inf, jnp.float32), global_params)
+            (_, winner), scores = jax.lax.scan(
+                step, init, (data, keys),
+                unroll=n if mode == "unroll" else 1)
+            return winner, scores, jnp.argmin(scores)
+
+    return jax.jit(round_fn, donate_argnums=_donate_argnums(donate))
+
+
+def make_batched_fedavg_round(task: Task, hp: ClientHP, n_clients: int,
+                              n_participants: int, vectorize: str = "auto",
+                              donate: bool = True):
+    """Returns jit'd ``round_fn(global_params, data, sel_key, keys) ->
+    (avg_params, scores, sel)``.
+
+    Client sampling happens on device: ``sel`` (``n_participants``
+    indices without replacement) gathers both the stacked data and the
+    per-client keys, so the host never materializes the selection before
+    dispatch.
+    """
+    mode = resolve_vectorize(vectorize)
+    client_update = make_client_update(task, hp, None)
+    m = n_participants
+
+    def select(sel_key, data, keys):
+        sel = jax.random.choice(sel_key, n_clients, (m,), replace=False)
+        sub = jax.tree.map(lambda a: jnp.take(a, sel, axis=0), data)
+        return sel, sub, jnp.take(keys, sel, axis=0)
+
+    if mode == "vmap":
+        def round_fn(global_params, data, sel_key, keys):
+            sel, sub, skeys = select(sel_key, data, keys)
+            scores, new = jax.vmap(client_update, in_axes=(None, 0, 0))(
+                global_params, sub, skeys)
+            avg = jax.tree.map(lambda a: jnp.mean(a, axis=0), new)
+            return avg, scores, sel
+    else:
+        def round_fn(global_params, data, sel_key, keys):
+            sel, sub, skeys = select(sel_key, data, keys)
+
+            def step(acc, xs):
+                d, k = xs
+                score, params = client_update(global_params, d, k)
+                # running mean accumulated in place (carry buffer)
+                acc = jax.tree.map(lambda s, p: s + p / m, acc, params)
+                return acc, score
+
+            acc0 = jax.tree.map(jnp.zeros_like, global_params)
+            avg, scores = jax.lax.scan(
+                step, acc0, (sub, skeys),
+                unroll=m if mode == "unroll" else 1)
+            return avg, scores, sel
+
+    return jax.jit(round_fn, donate_argnums=_donate_argnums(donate))
+
+
+class BatchedRoundEngine:
+    """Compiled whole-round executor used by :class:`repro.core.Server`.
+
+    Holds the stacked client data on device and one jit'd round function
+    per (task, strategy).  Raises ``ValueError`` at construction when
+    the client datasets cannot be stacked — the server then falls back
+    to its sequential loop.
+    """
+
+    def __init__(self, task: Task, strategy, hp: ClientHP,
+                 client_data: Sequence[Any],
+                 vectorize: Optional[str] = None):
+        stacked = stack_clients(client_data)
+        if stacked is None:
+            raise ValueError(
+                "client datasets are not uniform across clients; the "
+                "batched engine needs stackable (same-shape) client data")
+        self.n_clients = len(client_data)
+        self.data = stacked
+        self.is_fedx = strategy.is_fedx
+        self.vectorize = resolve_vectorize(
+            vectorize if vectorize is not None else hp.vectorize)
+        if self.is_fedx:
+            self.n_participants = self.n_clients
+            self._round = make_batched_fedx_round(
+                task, hp, strategy.mh, vectorize=self.vectorize)
+        else:
+            self.n_participants = max(
+                int(strategy.client_ratio * self.n_clients), 1)
+            self._round = make_batched_fedavg_round(
+                task, hp, self.n_clients, self.n_participants,
+                vectorize=self.vectorize)
+
+    def fedx_round(self, global_params, keys):
+        """-> (winner_params, scores, best_idx); one dispatch, no sync."""
+        return self._round(global_params, self.data, keys)
+
+    def fedavg_round(self, global_params, sel_key, keys):
+        """-> (avg_params, scores, sel); one dispatch, no sync."""
+        return self._round(global_params, self.data, sel_key, keys)
+
+
+# ------------------------------------------------------------ sharded --
+def _squeeze0(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def make_sharded_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
+                            mesh: Mesh, axis: str = "clients"):
+    """Mesh placement of the FedX round: clients map to slices of
+    ``axis``, local training runs with zero collectives, and the
+    cross-slice traffic is one fp32 all_gather (N x 4 bytes) plus one
+    masked-psum winner fetch (M bytes) — see repro.core.distributed.
+    """
+    client_update = make_client_update(task, hp, mh)
+
+    def per_shard(params, data, keys):
+        data = _squeeze0(data)
+        rng = jax.random.wrap_key_data(keys[0], impl="threefry2x32")
+        score, new_params = client_update(params, data, rng)
+        scores = jax.lax.all_gather(score, axis)            # N x 4 bytes
+        winner = jnp.argmin(scores)
+        me = jax.lax.axis_index(axis)
+        mask = (me == winner).astype(jnp.float32)
+        flat, unravel = ravel_pytree(new_params)
+        best = jax.lax.psum(flat * mask, axis)              # winner fetch
+        return unravel(best), scores
+
+    fn = shard_map(per_shard, mesh=mesh,
+                   in_specs=(P(), P(axis), P(axis)),
+                   out_specs=(P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def make_sharded_fedavg_round(task: Task, hp: ClientHP, mesh: Mesh,
+                              axis: str = "clients"):
+    """Mesh placement of FedAvg: a full-model all-reduce every round."""
+    client_update = make_client_update(task, hp, mh=None)
+
+    def per_shard(params, data, keys):
+        data = _squeeze0(data)
+        rng = jax.random.wrap_key_data(keys[0], impl="threefry2x32")
+        score, new_params = client_update(params, data, rng)
+        n = jax.lax.psum(1.0, axis)
+        avg = jax.tree.map(
+            lambda w: jax.lax.psum(w.astype(jnp.float32), axis) / n,
+            new_params)                                     # M bytes x N
+        scores = jax.lax.all_gather(score, axis)
+        return jax.tree.map(lambda a, ref: a.astype(ref.dtype),
+                            avg, new_params), scores
+
+    fn = shard_map(per_shard, mesh=mesh,
+                   in_specs=(P(), P(axis), P(axis)),
+                   out_specs=(P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)

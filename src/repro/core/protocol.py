@@ -10,6 +10,8 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional
 
+import jax
+
 from repro.core.server import Server
 
 
@@ -28,6 +30,7 @@ class RoundLog:
     test_acc: float
     wall_time_s: float
     info: Dict[str, Any]
+    round_time_s: float = 0.0    # run_round only, blocked on the result
 
 
 def run_federated(server: Server, eval_data, stop: StopConditions,
@@ -37,9 +40,13 @@ def run_federated(server: Server, eval_data, stop: StopConditions,
     for rnd in range(stop.max_rounds):
         t0 = time.perf_counter()
         info = server.run_round()
+        # block on the new global model so round_time_s measures device
+        # work, not dispatch (round 0 additionally includes compilation)
+        jax.block_until_ready(server.global_params)
+        t_round = time.perf_counter() - t0
         loss, acc = server.evaluate(eval_data)
         dt = time.perf_counter() - t0
-        logs.append(RoundLog(rnd, loss, acc, dt, info))
+        logs.append(RoundLog(rnd, loss, acc, dt, info, t_round))
         if verbose:
             print(f"  round {rnd:3d}  loss={loss:.4f} acc={acc:.4f} "
                   f"({dt:.2f}s) {info if rnd < 2 else ''}")

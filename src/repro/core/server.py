@@ -5,6 +5,17 @@
               client's weights and adopts them as the global model
               (Alg. 3: ServerRun + GetBestModel).  X ∈ {BWO, PSO, GWO,
               SCA} only changes the client-side meta-heuristic.
+
+Two round engines execute the same protocol with identical ``CommMeter``
+accounting:
+
+``batched``    — one jit'd dispatch for the whole round via
+                 :class:`repro.core.engine.BatchedRoundEngine`; zero
+                 per-client host syncs (exactly one device->host
+                 transfer per round, for the round log).
+``sequential`` — the original per-client jit loop; kept as the fallback
+                 for ragged (non-stackable) client datasets and as the
+                 baseline for the engine-parity tests/benchmarks.
 """
 from __future__ import annotations
 
@@ -13,10 +24,14 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.client import ClientHP, Task, make_client_update
 from repro.core.comm import CommMeter
+from repro.core.engine import BatchedRoundEngine, task_uses_conv
 from repro.metaheuristics import REGISTRY, Metaheuristic
+
+ENGINES = ("auto", "batched", "sequential")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,11 +55,19 @@ def get_strategy(name: str, client_ratio: float = 1.0, **mh_kw) -> Strategy:
 
 
 class Server:
-    """Orchestrates FL rounds over in-process simulated clients."""
+    """Orchestrates FL rounds over in-process simulated clients.
+
+    ``engine``: "auto" (batched when the client datasets stack and the
+    batched traversal is a measured win for the task/backend — on CPU
+    conv tasks stay sequential, see DESIGN.md §4), "batched" (forced),
+    or "sequential".
+    """
 
     def __init__(self, task: Task, strategy: Strategy, hp: ClientHP,
                  client_data: Sequence[Any], rng: jax.Array,
-                 model_bytes: Optional[int] = None):
+                 model_bytes: Optional[int] = None, engine: str = "auto"):
+        if engine not in ENGINES:
+            raise ValueError(f"engine={engine!r} not in {ENGINES}")
         self.task = task
         self.strategy = strategy
         self.hp = hp
@@ -58,12 +81,57 @@ class Server:
                               for l in jax.tree.leaves(self.global_params))
         self.meter = CommMeter(model_bytes=model_bytes,
                                n_clients=self.n_clients)
-        self._update = jax.jit(make_client_update(task, hp, strategy.mh))
+        self._engine: Optional[BatchedRoundEngine] = None
+        if engine != "sequential" and self.n_clients > 0:
+            # measured policy (DESIGN.md §4): on CPU, conv tasks run
+            # faster as per-client dispatches than under any batched
+            # client-axis traversal, so engine="auto" keeps them
+            # sequential; engine="batched" forces the batched engine
+            want = engine == "batched" or not (
+                jax.default_backend() == "cpu"
+                and task_uses_conv(
+                    task, self.global_params,
+                    jax.tree.map(lambda a: a[0], self.client_data[0])))
+            if want:
+                try:
+                    self._engine = BatchedRoundEngine(task, strategy, hp,
+                                                      self.client_data)
+                except ValueError:
+                    if engine == "batched":
+                        raise
+        self.engine = "batched" if self._engine is not None else "sequential"
+        self._update = None
+        if self._engine is None:
+            self._update = jax.jit(make_client_update(task, hp, strategy.mh))
 
     # ------------------------------------------------------------ round --
     def run_round(self) -> dict:
-        self.rng, sel_key, *ckeys = jax.random.split(self.rng,
-                                                     self.n_clients + 2)
+        keys = jax.random.split(self.rng, self.n_clients + 2)
+        self.rng, sel_key, ckeys = keys[0], keys[1], keys[2:]
+        if self._engine is not None:
+            return self._run_round_batched(sel_key, ckeys)
+        return self._run_round_sequential(sel_key, ckeys)
+
+    def _run_round_batched(self, sel_key, ckeys) -> dict:
+        if self.strategy.is_fedx:
+            new_params, scores, best = self._engine.fedx_round(
+                self.global_params, ckeys)
+            self.global_params = new_params
+            self.meter.record_fedx_round(fetched_model=True)
+            # the round's single device->host sync
+            scores, best = jax.device_get((scores, best))
+            best = int(best)
+            return {"best_client": best, "score": float(scores[best]),
+                    "scores": [float(s) for s in scores],
+                    "engine": "batched"}
+        new_params, _, sel = self._engine.fedavg_round(
+            self.global_params, sel_key, ckeys)
+        self.global_params = new_params
+        self.meter.record_fedavg_round(self._engine.n_participants)
+        return {"participants": [int(k) for k in jax.device_get(sel)],
+                "engine": "batched"}
+
+    def _run_round_sequential(self, sel_key, ckeys) -> dict:
         if self.strategy.is_fedx:
             # every client trains + refines, uploads only its score
             scores, params_list = [], []
@@ -72,13 +140,15 @@ class Server:
                                              self.client_data[k], ckeys[k])
                 scores.append(score)
                 params_list.append(params)
-            scores = jnp.stack(scores)
-            best = int(jnp.argmin(scores))
+            # one host sync per round, after all clients have dispatched
+            scores = np.asarray(jax.device_get(jnp.stack(scores)))
+            best = int(scores.argmin())
             # GetBestModel: one full-model transfer from the winner only
             self.global_params = params_list[best]
             self.meter.record_fedx_round(fetched_model=True)
             return {"best_client": best, "score": float(scores[best]),
-                    "scores": [float(s) for s in scores]}
+                    "scores": [float(s) for s in scores],
+                    "engine": "sequential"}
         # ---- FedAvg ----
         m = max(int(self.strategy.client_ratio * self.n_clients), 1)
         sel = jax.random.choice(sel_key, self.n_clients, (m,), replace=False)
@@ -90,7 +160,7 @@ class Server:
         self.global_params = jax.tree.map(
             lambda *xs: jnp.mean(jnp.stack(xs), 0), *new_params)
         self.meter.record_fedavg_round(m)
-        return {"participants": sel.tolist()}
+        return {"participants": sel.tolist(), "engine": "sequential"}
 
     # ------------------------------------------------------------- eval --
     def evaluate(self, eval_data) -> Tuple[float, float]:

@@ -61,6 +61,43 @@ def cnn_task(cfg: CNNConfig = CNNConfig()) -> Task:
     return Task(init_params, loss_fn)
 
 
+def mlp_task(hidden: int = 200, image_size: int = 32, channels: int = 3,
+             num_classes: int = 10) -> Task:
+    """The original FedAvg paper's "2NN" model: flatten -> two hidden
+    dense layers -> softmax, on the same CIFAR-like images.
+
+    Dense-only clients stay fast under the batched round engine's
+    vmap/unroll paths on every backend (vmapped matmuls are just bigger
+    GEMMs), unlike the conv CNN whose vmapped/looped convolutions hit
+    XLA:CPU slow paths — see DESIGN.md §4.
+    """
+    d_in = image_size * image_size * channels
+
+    def init_params(rng):
+        r1, r2, r3 = jax.random.split(rng, 3)
+
+        def dense(r, m, n):
+            return {"w": jax.random.normal(r, (m, n)) * (1.0 / m) ** 0.5,
+                    "b": jnp.zeros((n,))}
+
+        return {"fc1": dense(r1, d_in, hidden),
+                "fc2": dense(r2, hidden, hidden),
+                "out": dense(r3, hidden, num_classes)}
+
+    def loss_fn(params, batch):
+        x = batch["images"].reshape(batch["images"].shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        logits = x @ params["out"]["w"] + params["out"]["b"]
+        lp = jax.nn.log_softmax(logits)
+        labels = batch["labels"]
+        nll = -jnp.take_along_axis(lp, labels[:, None], -1).mean()
+        acc = (logits.argmax(-1) == labels).mean()
+        return nll, acc
+
+    return Task(init_params, loss_fn)
+
+
 def make_token_dataset(rng, n_seqs: int, seq_len: int, vocab: int,
                        order: int = 2):
     """Synthetic Markov token streams (learnable LM data for examples)."""

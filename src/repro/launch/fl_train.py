@@ -34,6 +34,16 @@ def main():
     ap.add_argument("--generations", type=int, default=3)
     ap.add_argument("--tau", type=float, default=0.70)     # paper §IV-D
     ap.add_argument("--non-iid", action="store_true")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "batched", "sequential"],
+                    help="round engine: batched = one jit'd dispatch per "
+                         "round (repro.core.engine); sequential = "
+                         "per-client jit loop; auto picks batched when "
+                         "client data stacks")
+    ap.add_argument("--vectorize", default="auto",
+                    choices=["auto", "vmap", "scan", "unroll"],
+                    help="client-axis traversal inside the batched "
+                         "engine (auto: scan on CPU, vmap elsewhere)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -43,12 +53,14 @@ def main():
     clients = client_batches(part(jax.random.PRNGKey(1), train,
                                   args.clients), args.batch)
     hp = ClientHP(local_epochs=args.local_epochs, lr=args.lr,
-                  mh_pop=args.pop, mh_generations=args.generations)
+                  mh_pop=args.pop, mh_generations=args.generations,
+                  vectorize=args.vectorize)
     server = Server(cnn_task(), get_strategy(args.strategy,
                                              client_ratio=args.client_ratio),
-                    hp, clients, jax.random.PRNGKey(7))
+                    hp, clients, jax.random.PRNGKey(7), engine=args.engine)
     stop = StopConditions(max_rounds=args.rounds, tau=args.tau)
     print(f"strategy={args.strategy} clients={args.clients} "
+          f"engine={server.engine} "
           f"model_bytes={server.meter.model_bytes:,}")
     logs = run_federated(server, test, stop, verbose=True)
 

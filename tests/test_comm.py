@@ -1,4 +1,7 @@
 """Property tests for the paper's communication-cost model (Eqs. 1-4)."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

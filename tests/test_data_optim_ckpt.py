@@ -3,11 +3,13 @@ round-trip, synthetic data learnability."""
 import os
 import tempfile
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint

@@ -1,5 +1,8 @@
 """Hypothesis property sweeps: randomized shapes/flags for the Pallas
 kernels against their oracles (interpret mode)."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

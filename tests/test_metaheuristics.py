@@ -1,9 +1,11 @@
 """Property + behaviour tests for BWO/PSO/GWO/SCA."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.metaheuristics import REGISTRY, bwo
