@@ -24,8 +24,7 @@ from typing import Dict, List
 
 import jax
 
-from repro.core import (ClientHP, Server, StopConditions, get_strategy,
-                        normalized_cost, run_federated)
+from repro.core import FLConfig, build_experiment, normalized_cost
 from repro.data import (client_batches, cnn_task, make_cifar_like,
                         partition_iid)
 
@@ -80,23 +79,28 @@ def _run_all() -> Dict[str, dict]:
         if cached is not None:
             _cache.update(cached)
             return _cache
+    # one shared dataset across the strategy sweep, passed through the
+    # build_experiment overrides so each run still goes through FLConfig
     rng = jax.random.PRNGKey(42)
     train, test = make_cifar_like(rng, N_TRAIN, N_TEST)
     clients = client_batches(
         partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), BATCH)
     task = cnn_task()
-    hp = ClientHP(local_epochs=LOCAL_EPOCHS, lr=0.0025, mh_pop=6,
-                  mh_generations=3)
-    stop = StopConditions(max_rounds=ROUNDS, patience=PATIENCE, tau=TAU)
     runs = {}
     for name in STRATEGIES:
         cs = FEDAVG_CS if name == "fedavg" else [1.0]
         for c in cs:
             key = name if name != "fedavg" else f"fedavg_c{c}"
+            cfg = FLConfig(strategy=name, client_ratio=c,
+                           n_clients=N_CLIENTS, batch_size=BATCH,
+                           local_epochs=LOCAL_EPOCHS, mh_pop=6,
+                           mh_generations=3, engine=ENGINE,
+                           max_rounds=ROUNDS, patience=PATIENCE, tau=TAU)
             t0 = time.perf_counter()
-            server = Server(task, get_strategy(name, client_ratio=c), hp,
-                            clients, jax.random.PRNGKey(7), engine=ENGINE)
-            logs = run_federated(server, test, stop)
+            exp = build_experiment(cfg, task=task, client_data=clients,
+                                   eval_data=test)
+            server = exp.server
+            logs = exp.run().logs
             jax.block_until_ready(server.global_params)
             wall = time.perf_counter() - t0
             # round 0 pays XLA compilation; steady state is the rest
@@ -163,22 +167,17 @@ def bench_noniid_ablation() -> List[tuple]:
     """Beyond-paper ablation: FedBWO under IID vs Dirichlet(0.5) label
     skew (the paper only evaluates IID).  Winner-takes-all aggregation
     is expected to degrade under skew — one client's model can't cover
-    absent classes."""
-    from repro.data import partition_dirichlet
-    rng = jax.random.PRNGKey(13)
-    n = max(400, N_TRAIN // 2)
-    train, test = make_cifar_like(rng, n, 150)
-    task = cnn_task()
-    hp = ClientHP(local_epochs=1, lr=0.0025, mh_pop=4, mh_generations=2)
-    stop = StopConditions(max_rounds=3, tau=0.95)
+    absent classes.  The Dirichlet run exercises the batched engine's
+    pad+mask path (DESIGN.md §5)."""
     out = []
-    for label, part in [("iid", partition_iid),
-                        ("dirichlet0.5", partition_dirichlet)]:
-        clients = client_batches(part(jax.random.PRNGKey(1), train, 5), 10)
+    for label, part in [("iid", "iid"), ("dirichlet0.5", "dirichlet")]:
+        cfg = FLConfig(strategy="fedbwo", partition=part, n_clients=5,
+                       n_train=max(400, N_TRAIN // 2), n_test=150,
+                       batch_size=10, local_epochs=1, mh_pop=4,
+                       mh_generations=2, max_rounds=3, tau=0.95,
+                       data_seed=13)
         t0 = time.perf_counter()
-        server = Server(task, get_strategy("fedbwo"), hp, clients,
-                        jax.random.PRNGKey(7))
-        logs = run_federated(server, test, stop)
+        logs = build_experiment(cfg).run().logs
         out.append((f"ablation_noniid/fedbwo_{label}",
                     (time.perf_counter() - t0) * 1e6,
                     round(logs[-1].test_acc, 4)))
@@ -194,11 +193,13 @@ def bench_exec_time() -> List[tuple]:
             for k, w in walls.items()]
 
 
-def _time_engines(task, clients, hp, label, steady_rounds) -> List[tuple]:
+def _time_engines(task, clients, eval_data, cfg_kw, label,
+                  steady_rounds) -> List[tuple]:
     rows, steady = [], {}
     for engine in ("sequential", "batched"):
-        server = Server(task, get_strategy("fedbwo"), hp, clients,
-                        jax.random.PRNGKey(7), engine=engine)
+        cfg = FLConfig(strategy="fedbwo", engine=engine, **cfg_kw)
+        server = build_experiment(cfg, task=task, client_data=clients,
+                                  eval_data=eval_data).server
         t0 = time.perf_counter()
         server.run_round()
         jax.block_until_ready(server.global_params)
@@ -240,14 +241,14 @@ def bench_round_engine() -> List[tuple]:
 
     steady_rounds = int(os.environ.get("REPRO_BENCH_ENGINE_ROUNDS", 3))
     rng = jax.random.PRNGKey(0)
-    train, _ = make_cifar_like(rng, N_TRAIN, 16)
+    train, test = make_cifar_like(rng, N_TRAIN, 16)
     clients = client_batches(
         partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), BATCH)
-    hp = ClientHP(local_epochs=LOCAL_EPOCHS, lr=0.0025, mh_pop=4,
-                  mh_generations=2)
-    rows = _time_engines(mlp_task(), clients, hp, "fedbwo_mlp",
+    cfg_kw = dict(n_clients=N_CLIENTS, batch_size=BATCH,
+                  local_epochs=LOCAL_EPOCHS, mh_pop=4, mh_generations=2)
+    rows = _time_engines(mlp_task(), clients, test, cfg_kw, "fedbwo_mlp",
                          steady_rounds)
     if os.environ.get("REPRO_BENCH_ENGINE_CNN"):
-        rows += _time_engines(cnn_task(), clients, hp, "fedbwo_cnn",
-                              steady_rounds)
+        rows += _time_engines(cnn_task(), clients, test, cfg_kw,
+                              "fedbwo_cnn", steady_rounds)
     return rows

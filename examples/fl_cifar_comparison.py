@@ -1,19 +1,15 @@
 """End-to-end driver: the paper's experiment — FedBWO vs FedAvg /
 FedPSO / FedGWO / FedSCA on (synthetic) CIFAR-10 with the paper's
 hyper-parameters (10 clients, batch 10, lr 0.0025, tau=0.70), and the
-Eq. 1-4 communication-cost comparison.
+Eq. 1-4 communication-cost comparison.  Each run is one ``FLConfig``
+through the experiment facade (repro.core.api).
 
     PYTHONPATH=src python examples/fl_cifar_comparison.py [--fast]
 """
 import argparse
-import json
 
-import jax
-
-from repro.core import (ClientHP, Server, StopConditions, get_strategy,
-                        normalized_cost, run_federated)
-from repro.data import (client_batches, cnn_task, make_cifar_like,
-                        partition_iid)
+from repro.core import FLConfig, build_experiment
+from repro.core.api import strategy_names
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--fast", action="store_true",
@@ -21,32 +17,26 @@ ap.add_argument("--fast", action="store_true",
 ap.add_argument("--rounds", type=int, default=None)
 args = ap.parse_args()
 
-n_train = 600 if args.fast else 1500
 rounds = args.rounds or (3 if args.fast else 10)
-N = 10
-
-rng = jax.random.PRNGKey(42)
-train, test = make_cifar_like(rng, n_train, 300)
-clients = client_batches(partition_iid(jax.random.PRNGKey(1), train, N), 10)
-task = cnn_task()
-hp = ClientHP(local_epochs=1 if args.fast else 2, lr=0.0025,
-              mh_pop=4 if args.fast else 6,
-              mh_generations=2 if args.fast else 3)
-stop = StopConditions(max_rounds=rounds, tau=0.70)
 
 results = {}
-for name in ["fedbwo", "fedpso", "fedgwo", "fedsca", "fedavg"]:
+for name in strategy_names():
     print(f"\n=== {name} ===")
-    server = Server(task, get_strategy(name), hp, clients,
-                    jax.random.PRNGKey(7))
-    logs = run_federated(server, test, stop, verbose=True)
+    cfg = FLConfig(strategy=name, n_clients=10,
+                   n_train=600 if args.fast else 1500, n_test=300,
+                   batch_size=10, lr=0.0025,
+                   local_epochs=1 if args.fast else 2,
+                   mh_pop=4 if args.fast else 6,
+                   mh_generations=2 if args.fast else 3,
+                   max_rounds=rounds, tau=0.70)
+    result = build_experiment(cfg).run(verbose=True)
+    s = result.summary(fedavg_rounds=rounds)
     results[name] = {
-        "rounds": len(logs),
-        "acc": logs[-1].test_acc,
-        "loss": logs[-1].test_loss,
-        "uplink_mb": server.meter.total_uplink / 1e6,
-        "norm_cost": normalized_cost(len(logs), N,
-                                     server.meter.model_bytes, rounds),
+        "rounds": s["rounds"],
+        "acc": s["final_acc"],
+        "loss": s["final_loss"],
+        "uplink_mb": s["comm"]["uplink_bytes"] / 1e6,
+        "norm_cost": s[f"normalized_cost_vs_fedavg{rounds}"],
     }
 
 print("\n--- paper Figs. 4-6 analogue (synthetic data) ---")

@@ -1,51 +1,40 @@
-"""Quickstart: FedBWO on the paper's CNN in ~40 lines.
+"""Quickstart: FedBWO on the paper's CNN in ~25 lines.
 
 Runs three federated rounds of the paper's protocol (every client trains
 locally + refines with BWO, uploads a 4-byte score, the server adopts
-the best client's weights) and prints the communication ledger.
+the best client's weights) and prints the communication ledger.  All the
+wiring — dataset synthesis, partitioning, client batching, server and
+stop conditions — hangs off one ``FLConfig`` (repro.core.api).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
-from repro.core import (ClientHP, Server, StopConditions, get_strategy,
-                        run_federated)
-from repro.data import (client_batches, cnn_task, make_cifar_like,
-                        partition_iid)
-
-N_CLIENTS = 5
-
-rng = jax.random.PRNGKey(0)
-train, test = make_cifar_like(rng, n_train=600, n_test=200)
-clients = client_batches(
-    partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), batch_size=10)
+from repro.core import FLConfig, build_experiment
 
 # ``engine="auto"`` compiles the whole round (all clients + server
-# argmin/averaging) into ONE device dispatch whenever the client
-# datasets stack AND the batched traversal is a measured win: on CPU,
-# conv tasks like this CNN stay on the sequential per-client loop
-# (XLA:CPU conv thunks beat every batched mode — DESIGN.md §4) while
-# dense tasks (repro.data.mlp_task) batch via an O(2 x model)
-# streaming lax.scan.  ``vectorize`` picks the client-axis traversal
-# inside the batched engine: "auto" = scan on CPU, vmap on TPU/GPU;
-# "unroll" trades compile time for straight-line code.
-server = Server(
-    task=cnn_task(),
-    strategy=get_strategy("fedbwo"),
-    hp=ClientHP(local_epochs=1, lr=0.0025, mh_pop=4, mh_generations=2,
-                vectorize="auto"),
-    client_data=clients,
-    rng=jax.random.PRNGKey(7),
-    engine="auto",
-)
-print(f"round engine = {server.engine}")
+# argmin/averaging) into ONE device dispatch whenever the batched
+# traversal is a measured win: on CPU, conv tasks like this CNN stay on
+# the sequential per-client loop (XLA:CPU conv thunks beat every
+# batched mode — DESIGN.md §4) while dense tasks (task="mlp") batch via
+# an O(2 x model) streaming lax.scan.  Ragged (partition="dirichlet")
+# client shards batch too, via pad+mask stacking (DESIGN.md §5).
+# ``vectorize`` picks the client-axis traversal inside the batched
+# engine: "auto" = scan on CPU, vmap on TPU/GPU; "scan:k" chunks the
+# scan; "unroll" trades compile time for straight-line code.
+cfg = FLConfig(strategy="fedbwo", task="cnn", n_clients=5,
+               n_train=600, n_test=200, batch_size=10,
+               local_epochs=1, mh_pop=4, mh_generations=2,
+               engine="auto", vectorize="auto",
+               max_rounds=3, tau=0.95,
+               data_seed=0, partition_seed=1, server_seed=7)
+exp = build_experiment(cfg)
+print(f"round engine = {exp.server.engine}")
+print(f"FedBWO | {cfg.n_clients} clients | model = "
+      f"{exp.meter.model_bytes / 1e6:.1f} MB")
 
-print(f"FedBWO | {N_CLIENTS} clients | model = "
-      f"{server.meter.model_bytes / 1e6:.1f} MB")
-logs = run_federated(server, test,
-                     StopConditions(max_rounds=3, tau=0.95), verbose=True)
+result = exp.run(verbose=True)
 
-s = server.meter.summary()
-print(f"\nrounds={s['rounds']}  uplink={s['uplink_bytes']:,} bytes "
-      f"(score uplink per round = {N_CLIENTS * 4} bytes + one model fetch)")
-print(f"final accuracy = {logs[-1].test_acc:.3f}")
+s = result.summary()
+print(f"\nrounds={s['rounds']}  uplink={s['comm']['uplink_bytes']:,} bytes "
+      f"(score uplink per round = {cfg.n_clients * 4} bytes "
+      f"+ one model fetch)")
+print(f"final accuracy = {s['final_acc']:.3f}")

@@ -1,18 +1,30 @@
 """The paper's primary contribution: the FedBWO communication-efficient
 FL protocol (score-only uplink + best-client weight fetch) and its
-FedAvg/FedPSO/FedGWO/FedSCA baselines."""
+FedAvg/FedPSO/FedGWO/FedSCA baselines.
+
+``FLConfig`` -> ``build_experiment()`` -> ``run()`` (repro.core.api) is
+the one construction path for experiments; the lower-level pieces
+(``Server``, ``ClientHP``, the round engines) remain directly usable.
+"""
 from repro.core.client import ClientHP, Task, make_client_update
 from repro.core.comm import (CommMeter, fedavg_total, fedx_total,
                              normalized_cost, SCORE_BYTES)
 from repro.core.engine import (BatchedRoundEngine, make_batched_fedavg_round,
                                make_batched_fedx_round, resolve_vectorize,
                                stack_clients)
+from repro.core.knobs import (ENGINES, VECTORIZE_MODES, parse_vectorize,
+                              validate_engine, validate_vectorize)
 from repro.core.protocol import RoundLog, StopConditions, run_federated
-from repro.core.server import ENGINES, Server, Strategy, get_strategy
+from repro.core.server import Server, Strategy, get_strategy
+from repro.core.api import (Experiment, ExperimentResult, FLConfig,
+                            build_experiment)
 
 __all__ = ["ClientHP", "Task", "make_client_update", "CommMeter",
            "fedavg_total", "fedx_total", "normalized_cost", "SCORE_BYTES",
            "BatchedRoundEngine", "make_batched_fedavg_round",
            "make_batched_fedx_round", "resolve_vectorize", "stack_clients",
-           "RoundLog", "StopConditions", "run_federated", "ENGINES",
-           "Server", "Strategy", "get_strategy"]
+           "ENGINES", "VECTORIZE_MODES", "parse_vectorize",
+           "validate_engine", "validate_vectorize",
+           "RoundLog", "StopConditions", "run_federated",
+           "Server", "Strategy", "get_strategy",
+           "Experiment", "ExperimentResult", "FLConfig", "build_experiment"]

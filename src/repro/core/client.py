@@ -47,8 +47,9 @@ class ClientHP:
     prox_mu: float = 0.0
     # How the batched round engine (repro.core.engine) traverses the
     # client axis: "vmap" | "scan" | "unroll" | "auto" (scan on CPU,
-    # vmap elsewhere).  See engine.resolve_vectorize and DESIGN.md §4
-    # for the measured tradeoffs.
+    # vmap elsewhere).  "scan:k" chunks the scan (unroll=k) so compile
+    # time stays flat in n_clients while dispatch overhead amortizes.
+    # See repro.core.knobs, engine.resolve_vectorize and DESIGN.md §4-5.
     vectorize: str = "auto"
     # NOTE on ``unroll``: XLA:CPU executes convolutions inside while
     # loops (lax.scan / fori_loop) ~20x slower than unrolled (no fast
@@ -57,8 +58,16 @@ class ClientHP:
     # long epoch counts on TPU where compile time would dominate.
 
 
-def make_local_sgd(task: Task, hp: ClientHP):
-    """data: dict of arrays with leading (n_batches, batch, ...) dims."""
+def make_local_sgd(task: Task, hp: ClientHP, masked: bool = False):
+    """data: dict of arrays with leading (n_batches, batch, ...) dims.
+
+    With ``masked=True`` the returned ``local_sgd`` takes an extra
+    ``(n_batches,)`` bool mask marking valid (non-padded) batches; the
+    update of a padded batch is discarded with ``jnp.where`` and —
+    crucially for parity with the same client's unpadded run — the PRNG
+    carry only advances past valid batches, so the per-batch dropout
+    keys match the sequential engine's bit for bit.
+    """
 
     def one_step(params, batch, dkey, anchor=None):
         def obj(p):
@@ -75,46 +84,70 @@ def make_local_sgd(task: Task, hp: ClientHP):
         return jax.tree.map(
             lambda p, g: p - hp.lr * g.astype(p.dtype), params, grads)
 
-    def sgd_epoch(params, data, rng, anchor):
-        def one_batch(carry, batch):
+    def sgd_epoch(params, data, rng, anchor, mask):
+        def one_batch(carry, xs):
             params, rng = carry
-            rng, dkey = jax.random.split(rng)
-            return (one_step(params, batch, dkey, anchor), rng), None
+            batch, valid = xs if masked else (xs, None)
+            rng2, dkey = jax.random.split(rng)
+            new_params = one_step(params, batch, dkey, anchor)
+            if masked:
+                new_params = jax.tree.map(
+                    lambda n, p: jnp.where(valid, n, p), new_params, params)
+                rng2 = jnp.where(valid, rng2, rng)
+            return (new_params, rng2), None
 
         n_batches = jax.tree.leaves(data)[0].shape[0]
         (params, _), _ = jax.lax.scan(
-            one_batch, (params, rng), data,
+            one_batch, (params, rng), (data, mask) if masked else data,
             unroll=n_batches if hp.unroll else 1)
         return params
 
-    def local_sgd(params, data, rng):
+    def local_sgd(params, data, rng, mask=None):
         anchor = params if hp.prox_mu > 0 else None   # w_global (FedProx)
         if hp.unroll:
             for _ in range(hp.local_epochs):
                 rng, ekey = jax.random.split(rng)
-                params = sgd_epoch(params, data, ekey, anchor)
+                params = sgd_epoch(params, data, ekey, anchor, mask)
             return params
 
         def body(_, carry):
             params, rng = carry
             rng, ekey = jax.random.split(rng)
-            return sgd_epoch(params, data, ekey, anchor), rng
+            return sgd_epoch(params, data, ekey, anchor, mask), rng
         params, _ = jax.lax.fori_loop(0, hp.local_epochs, body, (params, rng))
         return params
 
     return local_sgd
 
 
+def _fitness_slice(data, n_batches: int, n_valid=None):
+    """First ``n_batches`` batches of a client dataset.
+
+    For padded datasets (``n_valid`` given, the count of valid leading
+    batches) this replicates the unpadded ``a[:n_batches][i]`` clamp
+    semantics with a gather at ``min(i, n_valid - 1)``: a client with
+    fewer than ``n_batches`` valid batches scores the same duplicated
+    trailing batch as it does on the sequential engine, never a padded
+    zero batch.
+    """
+    if n_valid is None:
+        return jax.tree.map(lambda a: a[:n_batches], data)
+    idx = jnp.minimum(jnp.arange(n_batches), jnp.maximum(n_valid - 1, 0))
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data)
+
+
 def make_fitness_fn(task: Task, data, unravel, n_batches: int,
-                    unroll: bool = True):
+                    unroll: bool = True, n_valid=None):
     """Batched population fitness: mean loss over the first n_batches.
 
     Sequential map (not vmap) over the population: vmapping over *conv
     weights* lowers to grouped convolutions that are pathologically slow
     on CPU; population members are independent, so a map keeps each on
     the fast conv path.  Unrolled by default (see ClientHP.unroll).
+    ``n_valid`` marks the valid-batch count of a padded dataset (see
+    :func:`_fitness_slice`).
     """
-    sub = jax.tree.map(lambda a: a[:n_batches], data)
+    sub = _fitness_slice(data, n_batches, n_valid)
 
     def one(flat):
         params = unravel(flat)
@@ -147,20 +180,29 @@ def make_subspace_map(params, scale: float):
 
 
 def make_client_update(task: Task, hp: ClientHP,
-                       mh: Optional[Metaheuristic] = None):
+                       mh: Optional[Metaheuristic] = None,
+                       masked: bool = False):
     """Returns jit-able ``client_update(params, data, rng) ->
     (score, params)``.  With ``mh`` (FedX): SGD then meta-heuristic
     refinement; without (FedAvg): plain SGD, score = post-training loss.
-    """
-    local_sgd = make_local_sgd(task, hp)
 
-    def client_update(global_params, data, rng):
+    With ``masked=True`` the signature becomes ``client_update(params,
+    data, mask, rng)``: ``data`` is one client's row of a pad+mask stack
+    (:func:`repro.core.engine.stack_clients` with ``pad=True``) and
+    ``mask`` its ``(n_batches,)`` bool validity row.  Padded batches
+    contribute no SGD step and no fitness term, so scores and weights
+    match the same client's unpadded run on the sequential engine.
+    """
+    local_sgd = make_local_sgd(task, hp, masked=masked)
+
+    def client_update(global_params, data, rng, mask=None):
         r_sgd, r_mh = jax.random.split(rng)
-        params = local_sgd(global_params, data, r_sgd)
+        params = local_sgd(global_params, data, r_sgd, mask)
+        n_valid = None if mask is None else jnp.sum(mask.astype(jnp.int32))
 
         if hp.subspace and mh is not None:
             n_genes, apply_z = make_subspace_map(params, hp.subspace_scale)
-            sub = jax.tree.map(lambda a: a[:hp.fitness_batches], data)
+            sub = _fitness_slice(data, hp.fitness_batches, n_valid)
 
             def one_z(z):
                 p = apply_z(z)
@@ -183,7 +225,7 @@ def make_client_update(task: Task, hp: ClientHP,
 
         flat, unravel = ravel_pytree(params)
         fit_fn = make_fitness_fn(task, data, unravel, hp.fitness_batches,
-                                 unroll=hp.unroll)
+                                 unroll=hp.unroll, n_valid=n_valid)
         if mh is None:
             score = fit_fn(flat[None])[0]
             return score, params
@@ -205,4 +247,12 @@ def make_client_update(task: Task, hp: ClientHP,
         best_flat, best_fit = best_member(state)
         return best_fit, unravel(best_flat)
 
-    return client_update
+    if masked:
+        def masked_update(global_params, data, mask, rng):
+            return client_update(global_params, data, rng, mask)
+        return masked_update
+
+    def plain_update(global_params, data, rng):
+        return client_update(global_params, data, rng)
+
+    return plain_update

@@ -29,9 +29,22 @@ def fedx_total(t_rounds: int, n: int, m: int, eps: int = 0) -> int:
     return t_rounds * fedx_round_bytes(n, m, eps)                 # Eq. 2
 
 
-def normalized_cost(t_x: int, n: int, m: int, t_avg: int, c: float = 1.0,
-                    eps: int = 0) -> float:
-    """Eq. 3; with the paper's simplification it reduces to Eq. 4."""
+def normalized_cost(t_x, n: int = None, m: int = None, t_avg: int = 30,
+                    c: float = 1.0, eps: int = 0) -> float:
+    """Eq. 3; with the paper's simplification it reduces to Eq. 4.
+
+    The first argument is either the FedX round count ``t_x`` (with
+    ``n`` clients and ``m`` model bytes given explicitly) or a
+    :class:`CommMeter`, from which ``t_x`` (recorded rounds), ``n``, and
+    ``m`` are read — so callers stop re-deriving the Eq. 4 inputs by
+    hand.  ``t_avg`` defaults to the paper's 30 FedAvg rounds.
+    """
+    if isinstance(t_x, CommMeter):
+        meter = t_x
+        t_x, n, m = len(meter.uplink), meter.n_clients, meter.model_bytes
+    if n is None or m is None:
+        raise TypeError("normalized_cost needs (t_x, n, m) explicitly "
+                        "or a CommMeter as the first argument")
     return fedx_total(t_x, n, m, eps) / max(1, fedavg_total(t_avg, c, n, m))
 
 
@@ -59,11 +72,20 @@ class CommMeter:
         return sum(self.uplink)
 
     @property
+    def total_downlink(self) -> int:
+        return sum(self.downlink)
+
+    @property
     def total(self) -> int:
         return sum(self.uplink) + sum(self.downlink)
 
     def summary(self) -> Dict[str, float]:
         return {"rounds": len(self.uplink),
                 "uplink_bytes": self.total_uplink,
+                "downlink_bytes": self.total_downlink,
                 "total_bytes": self.total,
-                "model_bytes": self.model_bytes}
+                "model_bytes": self.model_bytes,
+                "rounds_detail": [
+                    {"round": i, "uplink_bytes": u, "downlink_bytes": d}
+                    for i, (u, d) in enumerate(zip(self.uplink,
+                                                   self.downlink))]}

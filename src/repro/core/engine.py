@@ -7,11 +7,22 @@ full model copy per client before the argmin.  This module compiles the
 aggregation — into a single XLA program:
 
 * client datasets are stacked along a leading ``(n_clients, ...)`` axis
-  (:func:`stack_clients`);
+  (:func:`stack_clients`); ragged datasets (Dirichlet splits) are
+  zero-padded to the longest client and a ``(n_clients, n_batches)``
+  validity mask rides along, threaded through ``make_client_update`` so
+  padded batches contribute no SGD step and no fitness term
+  (DESIGN.md §5);
 * ``make_client_update`` runs across that axis under ``jax.vmap``, a
   ``lax.scan`` device loop, or a Python-unrolled streaming loop,
   selected by the ``vectorize`` knob on :class:`~repro.core.client.
-  ClientHP` (see :func:`resolve_vectorize` for the CPU/TPU tradeoff);
+  ClientHP` (see :func:`resolve_vectorize` for the CPU/TPU tradeoff;
+  ``"scan:k"`` chunks the scan so compile time stays flat in the
+  client count);
+* FedAvg with ``client_ratio < 1`` samples its ``m`` participants on
+  host and gathers only their shards before dispatch
+  (sample-then-stack), so the round executable is compiled for shape
+  ``(m, ...)`` — one cached executable per participant count — instead
+  of tracing all ``n_clients``;
 * the FedX argmin runs **on device** and the winner's weights are
   selected with a ``jnp.where`` streaming reduction — the scan carry
   holds only ``(best_score, best_params)``, so peak weight memory is
@@ -28,7 +39,7 @@ placements of one round-builder.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +48,8 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.client import ClientHP, Task, make_client_update
+from repro.core.knobs import VECTORIZE_MODES, parse_vectorize
 from repro.metaheuristics import Metaheuristic
-
-VECTORIZE_MODES = ("auto", "vmap", "scan", "unroll")
 
 
 def resolve_vectorize(mode: str, backend: Optional[str] = None) -> str:
@@ -52,7 +62,9 @@ def resolve_vectorize(mode: str, backend: Optional[str] = None) -> str:
                  compact compile.  Measured fastest batched mode on CPU
                  for dense models (GEMMs are loop-body-safe); XLA:CPU
                  lacks fast conv thunks inside loop bodies, so conv
-                 models are ~5x slower here (DESIGN.md §4).
+                 models are ~5x slower here (DESIGN.md §4).  A
+                 ``"scan:k"`` suffix unrolls k scan iterations per loop
+                 step (repro.core.knobs).
     ``unroll`` — the scan unrolled in Python: still one dispatch and
                  the same streaming reduction.  Keeps CPU convs on the
                  fast conv thunk, but compile time grows ~linearly with
@@ -63,12 +75,18 @@ def resolve_vectorize(mode: str, backend: Optional[str] = None) -> str:
                  decision, which checks the task for convolutions —
                  see :func:`task_uses_conv`.)
     """
-    if mode not in VECTORIZE_MODES:
-        raise ValueError(f"vectorize={mode!r} not in {VECTORIZE_MODES}")
-    if mode != "auto":
-        return mode
+    base, _ = parse_vectorize(mode)
+    if base != "auto":
+        return base
     backend = backend or jax.default_backend()
     return "scan" if backend == "cpu" else "vmap"
+
+
+def _scan_unroll(vectorize: str, mode: str, n: int) -> int:
+    """lax.scan ``unroll`` for a client-axis scan of length ``n``:
+    the full length for mode="unroll", else the ':k' chunk."""
+    _, chunk = parse_vectorize(vectorize)
+    return n if mode == "unroll" else max(1, min(chunk, max(n, 1)))
 
 
 _CONV_PRIMITIVES = ("conv_general_dilated",)
@@ -107,25 +125,54 @@ def task_uses_conv(task: Task, params, sample_batch) -> bool:
         return True
 
 
-def stack_clients(client_data: Sequence[Any]):
+def stack_clients(client_data: Sequence[Any], pad: bool = False):
     """Stack per-client pytrees along a new leading client axis.
 
-    Returns ``None`` when the clients are not stackable (ragged shapes
-    from e.g. a Dirichlet split, or mismatched structures) — callers
-    fall back to the sequential engine.
+    With ``pad=False`` (legacy): returns the stacked pytree, or ``None``
+    when the clients are not exactly stackable (ragged batch counts or
+    mismatched structures).
+
+    With ``pad=True``: returns ``(stacked, mask)``.  Ragged *leading*
+    (batch-count) axes — e.g. a Dirichlet split — are zero-padded to the
+    longest client, and ``mask`` is a ``(n_clients, max_batches)`` bool
+    array marking the valid rows (all-True when the clients were already
+    uniform).  ``(None, None)`` when the clients are genuinely
+    unstackable: mismatched tree structures, trailing batch shapes,
+    dtypes, or inconsistent leading dims within one client.
     """
+    empty = (None, None) if pad else None
     if not client_data:
-        return None
+        return empty
     ref = jax.tree.structure(client_data[0])
     ref_leaves = jax.tree.leaves(client_data[0])
-    for d in client_data[1:]:
+    lens = []
+    for d in client_data:
         if jax.tree.structure(d) != ref:
-            return None
+            return empty
         leaves = jax.tree.leaves(d)
-        if any(a.shape != b.shape or a.dtype != b.dtype
+        heads = {l.shape[0] if l.ndim else None for l in leaves}
+        if len(heads) != 1 or None in heads:
+            return empty
+        lens.append(heads.pop())
+        if any(a.shape[1:] != b.shape[1:] or a.dtype != b.dtype
                for a, b in zip(leaves, ref_leaves)):
+            return empty
+    if not pad:
+        if len(set(lens)) > 1:
             return None
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *client_data)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *client_data)
+    max_len = max(lens)
+
+    def pad_to(a):
+        if a.shape[0] == max_len:
+            return a
+        width = [(0, max_len - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, width)
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack([pad_to(x) for x in xs]),
+                           *client_data)
+    mask = jnp.arange(max_len)[None, :] < jnp.asarray(lens)[:, None]
+    return stacked, mask
 
 
 def _tree_where(pred, a, b):
@@ -139,31 +186,38 @@ def _donate_argnums(enabled: bool = True):
 
 # ------------------------------------------------------------ batched --
 def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
-                            vectorize: str = "auto", donate: bool = True):
-    """Returns jit'd ``round_fn(global_params, data, keys) ->
+                            vectorize: str = "auto", donate: bool = True,
+                            masked: bool = False):
+    """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
     (best_params, scores, best_idx)``.
 
     ``data``: client datasets stacked to ``(n_clients, ...)`` leaves.
+    ``mask``: ``(n_clients, n_batches)`` bool validity rows from
+    ``stack_clients(..., pad=True)``, or ``None`` for uniform data
+    (``masked=False`` — an empty pytree arg, so both builds share one
+    signature).
     ``keys``: ``(n_clients, 2)`` uint32 PRNG keys, one per client.
     """
     mode = resolve_vectorize(vectorize)
-    client_update = make_client_update(task, hp, mh)
+    client_update = make_client_update(task, hp, mh, masked=masked)
+    update = (client_update if masked
+              else lambda p, d, m, k: client_update(p, d, k))
 
     if mode == "vmap":
-        def round_fn(global_params, data, keys):
-            scores, new = jax.vmap(client_update, in_axes=(None, 0, 0))(
-                global_params, data, keys)
+        def round_fn(global_params, data, mask, keys):
+            scores, new = jax.vmap(update, in_axes=(None, 0, 0, 0))(
+                global_params, data, mask, keys)
             best = jnp.argmin(scores)
             winner = jax.tree.map(lambda a: a[best], new)
             return winner, scores, best
     else:
-        def round_fn(global_params, data, keys):
+        def round_fn(global_params, data, mask, keys):
             n = keys.shape[0]
 
             def step(carry, xs):
                 best_fit, best_params = carry
-                d, k = xs
-                score, params = client_update(global_params, d, k)
+                d, msk, k = xs
+                score, params = update(global_params, d, msk, k)
                 take = score < best_fit
                 # streaming winner reduction: carry holds one model
                 best_params = _tree_where(take, params, best_params)
@@ -172,56 +226,56 @@ def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
 
             init = (jnp.asarray(jnp.inf, jnp.float32), global_params)
             (_, winner), scores = jax.lax.scan(
-                step, init, (data, keys),
-                unroll=n if mode == "unroll" else 1)
+                step, init, (data, mask, keys),
+                unroll=_scan_unroll(vectorize, mode, n))
             return winner, scores, jnp.argmin(scores)
 
     return jax.jit(round_fn, donate_argnums=_donate_argnums(donate))
 
 
-def make_batched_fedavg_round(task: Task, hp: ClientHP, n_clients: int,
-                              n_participants: int, vectorize: str = "auto",
-                              donate: bool = True):
-    """Returns jit'd ``round_fn(global_params, data, sel_key, keys) ->
-    (avg_params, scores, sel)``.
+def make_batched_fedavg_round(task: Task, hp: ClientHP,
+                              vectorize: str = "auto", donate: bool = True,
+                              masked: bool = False,
+                              on_trace: Optional[Callable[[int], None]]
+                              = None):
+    """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
+    (avg_params, scores)``.
 
-    Client sampling happens on device: ``sel`` (``n_participants``
-    indices without replacement) gathers both the stacked data and the
-    per-client keys, so the host never materializes the selection before
-    dispatch.
+    Shape-polymorphic over the leading participant axis (sample-then-
+    stack): the caller samples the ``m`` participants on host, gathers
+    their ``(m, ...)`` shards (plus mask rows and keys), and jit caches
+    one executable per distinct ``m`` — a round at ``client_ratio < 1``
+    never traces or compiles for the full ``n_clients``.  ``on_trace``
+    is called with ``m`` each time a new participant count is traced
+    (compile-cache accounting/tests).
     """
     mode = resolve_vectorize(vectorize)
-    client_update = make_client_update(task, hp, None)
-    m = n_participants
+    client_update = make_client_update(task, hp, None, masked=masked)
+    update = (client_update if masked
+              else lambda p, d, m, k: client_update(p, d, k))
 
-    def select(sel_key, data, keys):
-        sel = jax.random.choice(sel_key, n_clients, (m,), replace=False)
-        sub = jax.tree.map(lambda a: jnp.take(a, sel, axis=0), data)
-        return sel, sub, jnp.take(keys, sel, axis=0)
-
-    if mode == "vmap":
-        def round_fn(global_params, data, sel_key, keys):
-            sel, sub, skeys = select(sel_key, data, keys)
-            scores, new = jax.vmap(client_update, in_axes=(None, 0, 0))(
-                global_params, sub, skeys)
+    def round_fn(global_params, data, mask, keys):
+        m = keys.shape[0]
+        if on_trace is not None:
+            on_trace(m)
+        if mode == "vmap":
+            scores, new = jax.vmap(update, in_axes=(None, 0, 0, 0))(
+                global_params, data, mask, keys)
             avg = jax.tree.map(lambda a: jnp.mean(a, axis=0), new)
-            return avg, scores, sel
-    else:
-        def round_fn(global_params, data, sel_key, keys):
-            sel, sub, skeys = select(sel_key, data, keys)
+            return avg, scores
 
-            def step(acc, xs):
-                d, k = xs
-                score, params = client_update(global_params, d, k)
-                # running mean accumulated in place (carry buffer)
-                acc = jax.tree.map(lambda s, p: s + p / m, acc, params)
-                return acc, score
+        def step(acc, xs):
+            d, msk, k = xs
+            score, params = update(global_params, d, msk, k)
+            # running mean accumulated in place (carry buffer)
+            acc = jax.tree.map(lambda s, p: s + p / m, acc, params)
+            return acc, score
 
-            acc0 = jax.tree.map(jnp.zeros_like, global_params)
-            avg, scores = jax.lax.scan(
-                step, acc0, (sub, skeys),
-                unroll=m if mode == "unroll" else 1)
-            return avg, scores, sel
+        acc0 = jax.tree.map(jnp.zeros_like, global_params)
+        avg, scores = jax.lax.scan(
+            step, acc0, (data, mask, keys),
+            unroll=_scan_unroll(vectorize, mode, m))
+        return avg, scores
 
     return jax.jit(round_fn, donate_argnums=_donate_argnums(donate))
 
@@ -230,42 +284,67 @@ class BatchedRoundEngine:
     """Compiled whole-round executor used by :class:`repro.core.Server`.
 
     Holds the stacked client data on device and one jit'd round function
-    per (task, strategy).  Raises ``ValueError`` at construction when
-    the client datasets cannot be stacked — the server then falls back
-    to its sequential loop.
+    per (task, strategy).  Ragged client datasets are padded to the
+    longest client with a validity mask (``self.padded``); genuinely
+    unstackable datasets (mismatched structures / trailing shapes /
+    dtypes) raise ``ValueError`` at construction and the server falls
+    back to its sequential loop.
+
+    FedAvg participation is sample-then-stack: ``fedavg_round`` samples
+    the ``m = max(C * n, 1)`` participants on host, gathers their shards
+    and dispatches an executable compiled for shape ``(m, ...)``.
+    ``traced_participant_counts`` records every participant count the
+    round function was traced for (it should stay at one entry).
     """
 
     def __init__(self, task: Task, strategy, hp: ClientHP,
                  client_data: Sequence[Any],
                  vectorize: Optional[str] = None):
-        stacked = stack_clients(client_data)
+        stacked, mask = stack_clients(client_data, pad=True)
         if stacked is None:
             raise ValueError(
-                "client datasets are not uniform across clients; the "
-                "batched engine needs stackable (same-shape) client data")
+                "client datasets are not stackable: tree structures, "
+                "trailing batch shapes, and dtypes must match across "
+                "clients (ragged batch counts alone are fine — they are "
+                "padded and masked)")
         self.n_clients = len(client_data)
         self.data = stacked
+        self.padded = not bool(mask.all())
+        self.mask = mask if self.padded else None
         self.is_fedx = strategy.is_fedx
-        self.vectorize = resolve_vectorize(
-            vectorize if vectorize is not None else hp.vectorize)
+        spec = vectorize if vectorize is not None else hp.vectorize
+        self.vectorize = resolve_vectorize(spec)
+        self.traced_participant_counts: List[int] = []
         if self.is_fedx:
             self.n_participants = self.n_clients
             self._round = make_batched_fedx_round(
-                task, hp, strategy.mh, vectorize=self.vectorize)
+                task, hp, strategy.mh, vectorize=spec, masked=self.padded)
         else:
             self.n_participants = max(
                 int(strategy.client_ratio * self.n_clients), 1)
             self._round = make_batched_fedavg_round(
-                task, hp, self.n_clients, self.n_participants,
-                vectorize=self.vectorize)
+                task, hp, vectorize=spec, masked=self.padded,
+                on_trace=self.traced_participant_counts.append)
 
     def fedx_round(self, global_params, keys):
         """-> (winner_params, scores, best_idx); one dispatch, no sync."""
-        return self._round(global_params, self.data, keys)
+        return self._round(global_params, self.data, self.mask, keys)
 
     def fedavg_round(self, global_params, sel_key, keys):
-        """-> (avg_params, scores, sel); one dispatch, no sync."""
-        return self._round(global_params, self.data, sel_key, keys)
+        """-> (avg_params, scores, sel).
+
+        Sample-then-stack: the participant choice is materialized on
+        host, the ``(m, ...)`` shards are gathered outside the round
+        program, and the dispatch is one executable shaped for ``m``.
+        """
+        sel = jax.random.choice(sel_key, self.n_clients,
+                                (self.n_participants,), replace=False)
+        sub = jax.tree.map(lambda a: jnp.take(a, sel, axis=0), self.data)
+        mask = (None if self.mask is None
+                else jnp.take(self.mask, sel, axis=0))
+        avg, scores = self._round(global_params, sub, mask,
+                                  jnp.take(keys, sel, axis=0))
+        return avg, scores, sel
 
 
 # ------------------------------------------------------------ sharded --

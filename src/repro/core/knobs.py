@@ -1,0 +1,54 @@
+"""Single source of truth for the round-engine knob vocabulary.
+
+``Server`` (engine selection), the batched engine (client-axis
+traversal), the CLI driver (``repro.launch.fl_train``), and the
+:class:`repro.core.api.FLConfig` facade all validate their ``engine`` /
+``vectorize`` strings through these helpers instead of keeping separate
+choices lists.
+
+``vectorize`` accepts an optional ``:k`` suffix (``"scan:4"``) setting
+the ``lax.scan`` unroll chunk: the scan body is replicated ``k`` times
+per loop iteration, so compile time stays O(model) while dispatch
+overhead amortizes over ``k`` clients — the middle ground between
+``scan`` (k=1) and ``unroll`` (k=n).  Only meaningful for ``scan`` and
+for ``auto`` when it resolves to scan.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+ENGINES = ("auto", "batched", "sequential")
+VECTORIZE_MODES = ("auto", "vmap", "scan", "unroll")
+
+
+def validate_engine(name: str) -> str:
+    if name not in ENGINES:
+        raise ValueError(f"engine={name!r} not in {ENGINES}")
+    return name
+
+
+def parse_vectorize(spec: str) -> Tuple[str, int]:
+    """``"scan:4"`` -> ``("scan", 4)``; bare modes get chunk 1."""
+    base, sep, chunk = str(spec).partition(":")
+    if base not in VECTORIZE_MODES:
+        raise ValueError(
+            f"vectorize={spec!r}: mode {base!r} not in {VECTORIZE_MODES}")
+    if not sep:
+        return base, 1
+    if base not in ("scan", "auto"):
+        raise ValueError(
+            f"vectorize={spec!r}: the ':k' unroll chunk only applies to "
+            f"'scan' (or 'auto' resolving to scan)")
+    try:
+        k = int(chunk)
+    except ValueError:
+        k = 0
+    if k < 1:
+        raise ValueError(
+            f"vectorize={spec!r}: unroll chunk must be a positive integer")
+    return base, k
+
+
+def validate_vectorize(spec: str) -> str:
+    parse_vectorize(spec)
+    return spec

@@ -12,10 +12,15 @@ accounting:
 ``batched``    — one jit'd dispatch for the whole round via
                  :class:`repro.core.engine.BatchedRoundEngine`; zero
                  per-client host syncs (exactly one device->host
-                 transfer per round, for the round log).
+                 transfer per round, for the round log).  Ragged
+                 (e.g. Dirichlet-partitioned) client datasets batch
+                 too, via pad+mask stacking (DESIGN.md §5); FedAvg
+                 partial participation is sample-then-stack, compiled
+                 for the participant count only.
 ``sequential`` — the original per-client jit loop; kept as the fallback
-                 for ragged (non-stackable) client datasets and as the
-                 baseline for the engine-parity tests/benchmarks.
+                 for genuinely unstackable client datasets (mismatched
+                 structures/shapes/dtypes) and as the baseline for the
+                 engine-parity tests/benchmarks.
 """
 from __future__ import annotations
 
@@ -29,9 +34,8 @@ import numpy as np
 from repro.core.client import ClientHP, Task, make_client_update
 from repro.core.comm import CommMeter
 from repro.core.engine import BatchedRoundEngine, task_uses_conv
+from repro.core.knobs import ENGINES, validate_engine
 from repro.metaheuristics import REGISTRY, Metaheuristic
-
-ENGINES = ("auto", "batched", "sequential")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,17 +61,17 @@ def get_strategy(name: str, client_ratio: float = 1.0, **mh_kw) -> Strategy:
 class Server:
     """Orchestrates FL rounds over in-process simulated clients.
 
-    ``engine``: "auto" (batched when the client datasets stack and the
-    batched traversal is a measured win for the task/backend — on CPU
-    conv tasks stay sequential, see DESIGN.md §4), "batched" (forced),
-    or "sequential".
+    ``engine``: "auto" (batched when the client datasets stack — ragged
+    batch counts are padded and masked, DESIGN.md §5 — and the batched
+    traversal is a measured win for the task/backend; on CPU conv tasks
+    stay sequential, see DESIGN.md §4), "batched" (forced), or
+    "sequential".
     """
 
     def __init__(self, task: Task, strategy: Strategy, hp: ClientHP,
                  client_data: Sequence[Any], rng: jax.Array,
                  model_bytes: Optional[int] = None, engine: str = "auto"):
-        if engine not in ENGINES:
-            raise ValueError(f"engine={engine!r} not in {ENGINES}")
+        validate_engine(engine)
         self.task = task
         self.strategy = strategy
         self.hp = hp

@@ -1,5 +1,6 @@
 """FedBWO / FedX / FedAvg federated-training driver (the paper's
-experiment).
+experiment), a thin CLI over the ``FLConfig`` experiment facade
+(repro.core.api).
 
     PYTHONPATH=src python -m repro.launch.fl_train --strategy fedbwo \
         --clients 10 --rounds 8 --train 1000
@@ -9,19 +10,18 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-
-from repro.core import (ClientHP, Server, StopConditions, get_strategy,
-                        normalized_cost, run_federated)
-from repro.data import (client_batches, cnn_task, make_cifar_like,
-                        partition_dirichlet, partition_iid)
+from repro.core import FLConfig, build_experiment
+from repro.core.api import strategy_names, PARTITIONS, TASKS
+from repro.core.knobs import validate_engine, validate_vectorize
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--strategy", default="fedbwo",
-                    choices=["fedbwo", "fedpso", "fedgwo", "fedsca",
-                             "fedavg"])
+                    choices=list(strategy_names()))
+    ap.add_argument("--task", default="cnn", choices=list(TASKS),
+                    help="cnn = the paper's CNN; mlp = FedAvg 2NN "
+                         "(dense — batches on every backend)")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--client-ratio", type=float, default=1.0)
@@ -33,53 +33,47 @@ def main():
     ap.add_argument("--pop", type=int, default=6)
     ap.add_argument("--generations", type=int, default=3)
     ap.add_argument("--tau", type=float, default=0.70)     # paper §IV-D
-    ap.add_argument("--non-iid", action="store_true")
-    ap.add_argument("--engine", default="auto",
-                    choices=["auto", "batched", "sequential"],
+    ap.add_argument("--non-iid", action="store_true",
+                    help="Dirichlet label-skew partition; the batched "
+                         "engine pads+masks the ragged client shards")
+    ap.add_argument("--alpha", type=float, default=0.5,
+                    help="Dirichlet concentration for --non-iid")
+    ap.add_argument("--engine", default="auto", type=validate_engine,
+                    metavar="auto|batched|sequential",
                     help="round engine: batched = one jit'd dispatch per "
                          "round (repro.core.engine); sequential = "
                          "per-client jit loop; auto picks batched when "
-                         "client data stacks")
-    ap.add_argument("--vectorize", default="auto",
-                    choices=["auto", "vmap", "scan", "unroll"],
+                         "client data stacks (pad+mask for ragged)")
+    ap.add_argument("--vectorize", default="auto", type=validate_vectorize,
+                    metavar="auto|vmap|scan[:k]|unroll",
                     help="client-axis traversal inside the batched "
-                         "engine (auto: scan on CPU, vmap elsewhere)")
+                         "engine (auto: scan on CPU, vmap elsewhere; "
+                         "scan:k chunks the scan with unroll=k)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    rng = jax.random.PRNGKey(42)
-    train, test = make_cifar_like(rng, args.train, args.test)
-    part = partition_dirichlet if args.non_iid else partition_iid
-    clients = client_batches(part(jax.random.PRNGKey(1), train,
-                                  args.clients), args.batch)
-    hp = ClientHP(local_epochs=args.local_epochs, lr=args.lr,
-                  mh_pop=args.pop, mh_generations=args.generations,
-                  vectorize=args.vectorize)
-    server = Server(cnn_task(), get_strategy(args.strategy,
-                                             client_ratio=args.client_ratio),
-                    hp, clients, jax.random.PRNGKey(7), engine=args.engine)
-    stop = StopConditions(max_rounds=args.rounds, tau=args.tau)
-    print(f"strategy={args.strategy} clients={args.clients} "
-          f"engine={server.engine} "
-          f"model_bytes={server.meter.model_bytes:,}")
-    logs = run_federated(server, test, stop, verbose=True)
+    cfg = FLConfig(
+        strategy=args.strategy, task=args.task, n_clients=args.clients,
+        client_ratio=args.client_ratio,
+        partition="dirichlet" if args.non_iid else "iid",
+        dirichlet_alpha=args.alpha, n_train=args.train, n_test=args.test,
+        batch_size=args.batch, local_epochs=args.local_epochs, lr=args.lr,
+        mh_pop=args.pop, mh_generations=args.generations,
+        engine=args.engine, vectorize=args.vectorize,
+        max_rounds=args.rounds, tau=args.tau)
+    exp = build_experiment(cfg)
+    print(f"strategy={cfg.strategy} clients={cfg.n_clients} "
+          f"partition={cfg.partition} engine={exp.server.engine} "
+          f"model_bytes={exp.meter.model_bytes:,}")
+    result = exp.run(verbose=True)
 
-    t_x = len(logs)
-    summary = {
-        "strategy": args.strategy,
-        "rounds": t_x,
-        "final_acc": logs[-1].test_acc,
-        "final_loss": logs[-1].test_loss,
-        "uplink_bytes": server.meter.total_uplink,
-        "normalized_cost_vs_fedavg30":
-            normalized_cost(t_x, args.clients, server.meter.model_bytes, 30),
-    }
+    summary = result.summary(fedavg_rounds=30)
     print(json.dumps(summary, indent=1))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"summary": summary,
-                       "rounds": [vars(l) for l in logs]}, f, indent=1,
-                      default=str)
+                       "rounds": [vars(l) for l in result.logs]}, f,
+                      indent=1, default=str)
 
 
 if __name__ == "__main__":

@@ -54,3 +54,31 @@ def test_meter_round_accounting():
     meter.record_fedavg_round(5)
     assert meter.uplink == [10 * SCORE_BYTES + 1000, 5 * 1000]
     assert meter.total_uplink == 40 + 1000 + 5000
+
+
+def test_meter_summary_details():
+    meter = CommMeter(model_bytes=1000, n_clients=10)
+    meter.record_fedx_round()
+    meter.record_fedavg_round(5)
+    s = meter.summary()
+    assert s["rounds"] == 2
+    assert s["uplink_bytes"] == meter.total_uplink
+    assert s["downlink_bytes"] == meter.total_downlink == 15 * 1000
+    assert s["total_bytes"] == s["uplink_bytes"] + s["downlink_bytes"]
+    assert s["rounds_detail"] == [
+        {"round": 0, "uplink_bytes": 10 * SCORE_BYTES + 1000,
+         "downlink_bytes": 10 * 1000},
+        {"round": 1, "uplink_bytes": 5 * 1000,
+         "downlink_bytes": 5 * 1000}]
+
+
+def test_normalized_cost_accepts_meter():
+    meter = CommMeter(model_bytes=10**7, n_clients=10)
+    for _ in range(4):
+        meter.record_fedx_round()
+    assert normalized_cost(meter, t_avg=30) == \
+        normalized_cost(4, 10, 10**7, 30)
+    # the paper's headline comparison straight off the running meter
+    assert 0.012 < normalized_cost(meter) < 0.0140
+    with pytest.raises(TypeError):
+        normalized_cost(4)

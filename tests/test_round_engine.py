@@ -68,18 +68,21 @@ def test_vectorize_modes_agree():
     params = task.init_params(jax.random.PRNGKey(9))
     keys = jax.random.split(jax.random.PRNGKey(3), 3)
     scores = {}
-    for mode in ("vmap", "scan"):
+    for mode in ("vmap", "scan", "scan:2"):
         fn = make_batched_fedx_round(task, hp, bwo(), vectorize=mode)
-        _, s, best = fn(params, stacked, keys)
+        _, s, best = fn(params, stacked, None, keys)
         scores[mode] = np.asarray(s)
         assert int(best) == int(np.argmin(scores[mode]))
     np.testing.assert_allclose(scores["vmap"], scores["scan"], rtol=1e-4)
+    # the chunked scan is the same scan program, just unrolled by 2
+    np.testing.assert_allclose(scores["scan"], scores["scan:2"], rtol=1e-6)
 
 
 def test_resolve_vectorize():
     assert resolve_vectorize("auto", backend="cpu") == "scan"
     assert resolve_vectorize("auto", backend="tpu") == "vmap"
     assert resolve_vectorize("unroll", backend="cpu") == "unroll"
+    assert resolve_vectorize("scan:4", backend="cpu") == "scan"
     with pytest.raises(ValueError):
         resolve_vectorize("bogus")
 
@@ -113,11 +116,36 @@ def test_auto_engine_keeps_conv_tasks_sequential_on_cpu():
         assert server.engine == "batched"
 
 
-def test_ragged_clients_fall_back_to_sequential():
+def test_ragged_clients_batch_via_pad_and_mask():
+    """Ragged batch counts no longer force the sequential fallback: the
+    engine pads to the longest client and masks (DESIGN.md §5)."""
     task = make_toy_task()
     clients = [batch_dataset(make_toy_data(jax.random.PRNGKey(i), n), 8)
                for i, n in enumerate([64, 96])]   # ragged: 8 vs 12 batches
+    assert stack_clients(clients) is None         # legacy exact stacking
+    stacked, mask = stack_clients(clients, pad=True)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 2
+    assert mask.shape == (2, 12)
+    assert int(mask.sum()) == 8 + 12
+    hp = ClientHP(local_epochs=1, mh_pop=4, mh_generations=2)
+    server = Server(task, get_strategy("fedbwo"), hp, clients,
+                    jax.random.PRNGKey(3), engine="auto")
+    assert server.engine == "batched"
+    assert server._engine.padded
+    info = server.run_round()
+    assert info["engine"] == "batched"
+    assert 0 <= info["best_client"] < 2
+
+
+def test_unstackable_clients_fall_back_to_sequential():
+    """Mismatched trailing shapes (not just ragged batch counts) are
+    genuinely unstackable: auto falls back, batched raises."""
+    task = make_toy_task()
+    clients = [batch_dataset(make_toy_data(jax.random.PRNGKey(0), 64), 8),
+               batch_dataset(make_toy_data(jax.random.PRNGKey(1), 64,
+                                           d=16), 8)]   # feature dim 8 vs 16
     assert stack_clients(clients) is None
+    assert stack_clients(clients, pad=True) == (None, None)
     hp = ClientHP(local_epochs=1, mh_pop=4, mh_generations=2)
     server = Server(task, get_strategy("fedbwo"), hp, clients,
                     jax.random.PRNGKey(3), engine="auto")
@@ -125,9 +153,6 @@ def test_ragged_clients_fall_back_to_sequential():
     with pytest.raises(ValueError):
         Server(task, get_strategy("fedbwo"), hp, clients,
                jax.random.PRNGKey(3), engine="batched")
-    info = server.run_round()
-    assert info["engine"] == "sequential"
-    assert 0 <= info["best_client"] < 2
 
 
 # --------------------------------------------------- memory shape ----
@@ -171,10 +196,10 @@ def test_fedx_scan_path_streams_weights():
     threshold = n_clients * n_params
 
     fn = make_batched_fedx_round(task, hp, bwo(), vectorize="scan")
-    assert _max_intermediate_size(fn, params, stacked, keys) < threshold
+    assert _max_intermediate_size(fn, params, stacked, None, keys) < threshold
 
     # positive control: the vmap path DOES stack all client weights,
     # so the detector is actually measuring what we think it measures
     fn_vmap = make_batched_fedx_round(task, hp, bwo(), vectorize="vmap")
-    assert _max_intermediate_size(fn_vmap, params, stacked,
+    assert _max_intermediate_size(fn_vmap, params, stacked, None,
                                   keys) >= threshold
