@@ -222,6 +222,76 @@ def _time_engines(task, clients, eval_data, cfg_kw, label,
     return rows
 
 
+def bench_fused_rounds() -> List[tuple]:
+    """Multi-round fusion sweep (DESIGN.md §6): rounds_per_dispatch in
+    {1, 5, 10} on FedBWO x the dense ``mlp_task``, batched engine.
+
+    R=1 is the PR-7 baseline — one round dispatch plus one host-side
+    eval dispatch per round.  R>1 dispatches one fused XLA program per
+    R-round block with eval folded in at cadence 1, paying one
+    device->host log sync per block.  Reports the compile (first
+    dispatch) / steady-state split; the derived column of the
+    ``*_steady`` rows is the per-round speedup vs R=1.  Full numbers
+    land in ``BENCH_fused_rounds.json``.
+    """
+    from repro.data import mlp_task
+
+    sweep = (1, 5, 10)
+    steady_target = int(os.environ.get("REPRO_BENCH_FUSED_ROUNDS", 10))
+    rng = jax.random.PRNGKey(0)
+    train, test = make_cifar_like(rng, N_TRAIN, 16)
+    clients = client_batches(
+        partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), BATCH)
+    task = mlp_task()
+    results, rows = {}, []
+    for r in sweep:
+        cfg = FLConfig(strategy="fedbwo", task="mlp", engine="batched",
+                       n_clients=N_CLIENTS, batch_size=BATCH,
+                       local_epochs=LOCAL_EPOCHS, mh_pop=4,
+                       mh_generations=2, rounds_per_dispatch=r)
+        server = build_experiment(cfg, task=task, client_data=clients,
+                                  eval_data=test).server
+
+        def block():
+            if r == 1:
+                # unfused baseline: round dispatch + host eval round-trip
+                server.run_round()
+                jax.block_until_ready(server.global_params)
+                server.evaluate(test)
+            else:
+                server.run_block(r, eval_data=test, eval_every=1)
+                jax.block_until_ready(server.global_params)
+
+        t0 = time.perf_counter()
+        block()                                   # pays XLA compilation
+        first = time.perf_counter() - t0
+        n_blocks = max(1, steady_target // r)
+        t0 = time.perf_counter()
+        for _ in range(n_blocks):
+            block()
+        steady = (time.perf_counter() - t0) / (n_blocks * r)
+        results[str(r)] = {"rounds_per_dispatch": r, "compile_s": first,
+                           "steady_round_s": steady,
+                           "steady_rounds_measured": n_blocks * r}
+        print(f"  [fused:R={r}] first={first:.2f}s "
+              f"steady={steady:.3f}s/round", flush=True)
+    base = results["1"]["steady_round_s"]
+    for r in sweep:
+        entry = results[str(r)]
+        entry["speedup_vs_r1"] = round(base / entry["steady_round_s"], 4)
+        rows.append((f"fused_rounds/R{r}_first",
+                     entry["compile_s"] * 1e6, f"clients={N_CLIENTS}"))
+        rows.append((f"fused_rounds/R{r}_steady",
+                     entry["steady_round_s"] * 1e6,
+                     entry["speedup_vs_r1"]))
+    payload = {"config": _bench_config(), "backend": jax.default_backend(),
+               "strategy": "fedbwo", "task": "mlp",
+               "eval_every": 1, "sweep": results}
+    with open("BENCH_fused_rounds.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    return rows
+
+
 def bench_round_engine() -> List[tuple]:
     """Tentpole benchmark: sequential per-client jit loop vs the batched
     one-dispatch-per-round engine (repro.core.engine).

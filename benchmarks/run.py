@@ -5,6 +5,7 @@
 #   fig6_comm_cost/*  — paper Fig. 6 (normalized communication cost)
 #   fig7_exec_time/*  — paper Fig. 7 (normalized execution time)
 #   round_engine/*    — sequential vs batched one-dispatch round engine
+#   fused_rounds/*    — rounds_per_dispatch sweep (one dispatch per R rounds)
 #   roofline/*        — §Roofline terms per (arch x shape x mesh) dry-run
 #   kernel/*          — Pallas kernel micro-benchmarks
 import sys
@@ -13,15 +14,15 @@ import traceback
 
 def main() -> None:
     from benchmarks.fl_bench import (bench_accuracy, bench_comm_cost,
-                                     bench_exec_time, bench_loss,
-                                     bench_noniid_ablation,
+                                     bench_exec_time, bench_fused_rounds,
+                                     bench_loss, bench_noniid_ablation,
                                      bench_round_engine)
     from benchmarks.kernel_bench import bench_kernels
     from benchmarks.roofline_bench import bench_roofline
 
     benches = [bench_kernels, bench_roofline, bench_accuracy, bench_loss,
                bench_comm_cost, bench_exec_time, bench_noniid_ablation,
-               bench_round_engine]
+               bench_round_engine, bench_fused_rounds]
     print("name,us_per_call,derived")
     failures = 0
     for bench in benches:

@@ -25,7 +25,9 @@ import jax
 
 from repro.core.client import ClientHP, Task
 from repro.core.comm import normalized_cost
-from repro.core.knobs import validate_engine, validate_vectorize
+from repro.core.knobs import (validate_engine,
+                              validate_rounds_per_dispatch,
+                              validate_vectorize)
 from repro.core.protocol import RoundLog, StopConditions, run_federated
 from repro.core.server import Server, get_strategy
 from repro.metaheuristics import REGISTRY
@@ -62,6 +64,15 @@ class FLConfig:
     mh_generations: int = 3
     engine: str = "auto"            # repro.core.knobs.ENGINES
     vectorize: str = "auto"         # knobs.VECTORIZE_MODES, opt. ":k"
+    # rounds fused into one device dispatch ("auto" | int >= 1): R > 1
+    # runs blocks of R rounds as one XLA program with one host sync per
+    # block (DESIGN.md §6); "auto" = measured default on the batched
+    # engine, 1 on the sequential fallback
+    rounds_per_dispatch: Any = 1
+    # evaluate the global model every k-th round; with fused blocks the
+    # cadence runs on device, so skipped evals cost neither compute nor
+    # a sync (block boundaries always evaluate)
+    eval_every: int = 1
     max_rounds: int = 8
     patience: int = 5               # paper: t = 5
     tau: float = 0.70               # paper §IV-D
@@ -72,6 +83,9 @@ class FLConfig:
     def __post_init__(self):
         validate_engine(self.engine)
         validate_vectorize(self.vectorize)
+        validate_rounds_per_dispatch(self.rounds_per_dispatch)
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every={self.eval_every} must be >= 1")
         if self.task not in TASKS:
             raise ValueError(f"task={self.task!r} not in {TASKS}")
         if self.partition not in PARTITIONS:
@@ -133,7 +147,8 @@ def build_experiment(cfg: FLConfig, *, task: Optional[Task] = None,
                                  client_ratio=cfg.client_ratio),
                     hp if hp is not None else cfg.client_hp(),
                     client_data, jax.random.PRNGKey(cfg.server_seed),
-                    engine=cfg.engine)
+                    engine=cfg.engine,
+                    rounds_per_dispatch=cfg.rounds_per_dispatch)
     return Experiment(cfg=cfg, server=server, eval_data=eval_data,
                       stop=cfg.stop_conditions())
 
@@ -152,7 +167,8 @@ class Experiment:
 
     def run(self, verbose: bool = False) -> "ExperimentResult":
         logs = run_federated(self.server, self.eval_data, self.stop,
-                             verbose=verbose)
+                             verbose=verbose,
+                             eval_every=self.cfg.eval_every)
         return ExperimentResult(cfg=self.cfg, server=self.server,
                                 logs=logs)
 
@@ -173,6 +189,7 @@ class ExperimentResult:
             "task": self.cfg.task,
             "partition": self.cfg.partition,
             "engine": self.server.engine,
+            "rounds_per_dispatch": self.server.rounds_per_dispatch,
             "rounds": len(self.logs),
             "final_acc": self.logs[-1].test_acc,
             "final_loss": self.logs[-1].test_loss,

@@ -67,6 +67,33 @@ class CommMeter:
         self.uplink.append(up)
         self.downlink.append(self.n_clients * self.model_bytes)
 
+    def record_rounds(self, strategy, n_rounds: int,
+                      n_participants: int = None,
+                      fetched_model: bool = True):
+        """Block recording for ``n_rounds`` protocol-identical rounds —
+        the fused multi-round engine executes a whole block in one
+        dispatch, then reconstructs the per-round ledger here so the
+        byte accounting is entry-for-entry identical to ``n_rounds``
+        single-round recordings.
+
+        ``strategy`` is either a strategy name (``"fedavg"`` means
+        FedAvg; any other name, e.g. ``"fedbwo"``, means FedX) or an
+        object with an ``is_fedx`` attribute (e.g.
+        ``repro.core.Strategy``).  FedAvg recording requires
+        ``n_participants`` (fixed per round at a given client ratio).
+        """
+        is_fedx = getattr(strategy, "is_fedx", None)
+        if is_fedx is None:
+            is_fedx = str(strategy).lower() != "fedavg"
+        if not is_fedx and n_participants is None:
+            raise TypeError(
+                "record_rounds for FedAvg needs n_participants")
+        for _ in range(int(n_rounds)):
+            if is_fedx:
+                self.record_fedx_round(fetched_model=fetched_model)
+            else:
+                self.record_fedavg_round(n_participants)
+
     @property
     def total_uplink(self) -> int:
         return sum(self.uplink)

@@ -179,25 +179,19 @@ def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _donate_argnums(enabled: bool = True):
+def _donate_argnums(enabled: bool = True, argnums: Tuple[int, ...] = (0,)):
     # buffer donation is a no-op (plus a warning per call) on CPU
-    return (0,) if enabled and jax.default_backend() != "cpu" else ()
+    return argnums if enabled and jax.default_backend() != "cpu" else ()
 
 
 # ------------------------------------------------------------ batched --
-def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
-                            vectorize: str = "auto", donate: bool = True,
-                            masked: bool = False):
-    """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
-    (best_params, scores, best_idx)``.
-
-    ``data``: client datasets stacked to ``(n_clients, ...)`` leaves.
-    ``mask``: ``(n_clients, n_batches)`` bool validity rows from
-    ``stack_clients(..., pad=True)``, or ``None`` for uniform data
-    (``masked=False`` — an empty pytree arg, so both builds share one
-    signature).
-    ``keys``: ``(n_clients, 2)`` uint32 PRNG keys, one per client.
-    """
+def _fedx_round_body(task: Task, hp: ClientHP, mh: Metaheuristic,
+                     vectorize: str = "auto", masked: bool = False):
+    """Un-jitted FedX round: ``round_fn(global_params, data, mask, keys)
+    -> (best_params, scores, best_idx)``.  Jitted standalone by
+    :func:`make_batched_fedx_round`; traced inline by the multi-round
+    fusion (:func:`make_fused_rounds`) so one XLA program spans a whole
+    block of rounds."""
     mode = resolve_vectorize(vectorize)
     client_update = make_client_update(task, hp, mh, masked=masked)
     update = (client_update if masked
@@ -230,25 +224,32 @@ def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
                 unroll=_scan_unroll(vectorize, mode, n))
             return winner, scores, jnp.argmin(scores)
 
-    return jax.jit(round_fn, donate_argnums=_donate_argnums(donate))
+    return round_fn
 
 
-def make_batched_fedavg_round(task: Task, hp: ClientHP,
-                              vectorize: str = "auto", donate: bool = True,
-                              masked: bool = False,
-                              on_trace: Optional[Callable[[int], None]]
-                              = None):
+def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
+                            vectorize: str = "auto", donate: bool = True,
+                            masked: bool = False):
     """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
-    (avg_params, scores)``.
+    (best_params, scores, best_idx)``.
 
-    Shape-polymorphic over the leading participant axis (sample-then-
-    stack): the caller samples the ``m`` participants on host, gathers
-    their ``(m, ...)`` shards (plus mask rows and keys), and jit caches
-    one executable per distinct ``m`` — a round at ``client_ratio < 1``
-    never traces or compiles for the full ``n_clients``.  ``on_trace``
-    is called with ``m`` each time a new participant count is traced
-    (compile-cache accounting/tests).
+    ``data``: client datasets stacked to ``(n_clients, ...)`` leaves.
+    ``mask``: ``(n_clients, n_batches)`` bool validity rows from
+    ``stack_clients(..., pad=True)``, or ``None`` for uniform data
+    (``masked=False`` — an empty pytree arg, so both builds share one
+    signature).
+    ``keys``: ``(n_clients, 2)`` uint32 PRNG keys, one per client.
     """
+    return jax.jit(_fedx_round_body(task, hp, mh, vectorize, masked),
+                   donate_argnums=_donate_argnums(donate))
+
+
+def _fedavg_round_body(task: Task, hp: ClientHP, vectorize: str = "auto",
+                       masked: bool = False,
+                       on_trace: Optional[Callable[[int], None]] = None):
+    """Un-jitted FedAvg round: ``round_fn(global_params, data, mask,
+    keys) -> (avg_params, scores)`` over the (already gathered)
+    participant axis.  See :func:`_fedx_round_body`."""
     mode = resolve_vectorize(vectorize)
     client_update = make_client_update(task, hp, None, masked=masked)
     update = (client_update if masked
@@ -277,7 +278,135 @@ def make_batched_fedavg_round(task: Task, hp: ClientHP,
             unroll=_scan_unroll(vectorize, mode, m))
         return avg, scores
 
-    return jax.jit(round_fn, donate_argnums=_donate_argnums(donate))
+    return round_fn
+
+
+def make_batched_fedavg_round(task: Task, hp: ClientHP,
+                              vectorize: str = "auto", donate: bool = True,
+                              masked: bool = False,
+                              on_trace: Optional[Callable[[int], None]]
+                              = None):
+    """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
+    (avg_params, scores)``.
+
+    Shape-polymorphic over the leading participant axis (sample-then-
+    stack): the caller samples the ``m`` participants on host, gathers
+    their ``(m, ...)`` shards (plus mask rows and keys), and jit caches
+    one executable per distinct ``m`` — a round at ``client_ratio < 1``
+    never traces or compiles for the full ``n_clients``.  ``on_trace``
+    is called with ``m`` each time a new participant count is traced
+    (compile-cache accounting/tests).
+    """
+    return jax.jit(_fedavg_round_body(task, hp, vectorize, masked, on_trace),
+                   donate_argnums=_donate_argnums(donate))
+
+
+# -------------------------------------------------------------- fused --
+def make_fused_rounds(task: Task, strategy, hp: ClientHP,
+                      rounds_per_dispatch: int, *, n_clients: int,
+                      vectorize: str = "auto", masked: bool = False,
+                      eval_every: int = 0, donate: bool = True,
+                      on_trace: Optional[Callable[[int], None]] = None):
+    """Fuse ``rounds_per_dispatch`` FL rounds into one XLA dispatch.
+
+    Wraps the single-round bodies (:func:`_fedx_round_body` /
+    :func:`_fedavg_round_body`) in an outer ``lax.scan`` over the round
+    axis, carrying ``(global_params, rng)``.  FedBWO's protocol has no
+    per-round host decision at full participation — clients upload a
+    4-byte score and the server adopts the winner on device — so entire
+    blocks of rounds are fusible: the host pays one dispatch and one
+    device->host log sync per ``R`` rounds instead of per round.
+
+    Returns jit'd ``block_fn(global_params, rng, data, mask, eval_batch,
+    round_offset) -> (new_params, new_rng, logs)`` where ``logs`` holds
+    stacked per-round device arrays:
+
+    * FedX:   ``{"scores": (R, n), "best": (R,)}``
+    * FedAvg: ``{"scores": (R, m), "participants": (R, m)}``
+    * plus ``{"eval_loss": (R,), "eval_acc": (R,)}`` when ``eval_every
+      > 0`` and an ``eval_batch`` is passed — ``task.loss_fn`` on the
+      held-out batch folded into the scan under ``lax.cond``, NaN on
+      rounds the cadence skips, so accuracy curves no longer force a
+      per-round sync.
+
+    Bit-exactness with ``Server.run_round``: the scan body derives each
+    round's keys with the same ``jax.random.split(rng, n_clients + 2)
+    -> (rng, sel_key, client_keys)`` schedule the server runs on host —
+    threefry is deterministic across the host/device boundary, so the
+    key sequence (and everything downstream) is identical.  FedAvg
+    ``client_ratio < 1`` moves the sample-then-stack participant choice
+    on device: the same ``jax.random.choice(sel_key, n, (m,),
+    replace=False)`` at fixed ``m``, followed by an in-program gather of
+    the participants' shards/mask rows/keys — the block executable is
+    still compiled for the participant count ``m`` only (one cached
+    program per distinct ``m``, like the single-round path).
+
+    ``round_offset`` (traced scalar) anchors the eval cadence globally:
+    round ``round_offset + i`` evaluates when ``(round_offset + i + 1) %
+    eval_every == 0`` — and always on the block's last round, so the
+    driver has a fresh accuracy at every sync point for its stopping
+    conditions.  ``eval_batch`` may be ``None`` (empty pytree) when
+    ``eval_every == 0``.
+
+    The params/rng carries are donated across the block
+    (``donate_argnums``) on backends that support aliasing.
+    """
+    n_rounds = int(rounds_per_dispatch)
+    if n_rounds < 1:
+        raise ValueError(
+            f"rounds_per_dispatch={rounds_per_dispatch!r} must be >= 1")
+    is_fedx = getattr(strategy, "is_fedx", False)
+    if is_fedx:
+        round_body = _fedx_round_body(task, hp, strategy.mh, vectorize,
+                                      masked)
+        m = n_clients
+    else:
+        round_body = _fedavg_round_body(task, hp, vectorize, masked,
+                                        on_trace)
+        m = max(int(strategy.client_ratio * n_clients), 1)
+
+    def block_fn(global_params, rng, data, mask, eval_batch, round_offset):
+        do_eval = eval_every > 0 and eval_batch is not None
+
+        def one_round(carry, i):
+            params, rng = carry
+            # Server.run_round's host key schedule, derived on device
+            keys = jax.random.split(rng, n_clients + 2)
+            rng, sel_key, ckeys = keys[0], keys[1], keys[2:]
+            if is_fedx:
+                new_params, scores, best = round_body(params, data, mask,
+                                                      ckeys)
+                log = {"scores": scores, "best": best}
+            else:
+                # on-device sample-then-stack: same choice op and key as
+                # the host path, gather inside the program at fixed m
+                sel = jax.random.choice(sel_key, n_clients, (m,),
+                                        replace=False)
+                sub = jax.tree.map(lambda a: jnp.take(a, sel, axis=0),
+                                   data)
+                msk = (None if mask is None
+                       else jnp.take(mask, sel, axis=0))
+                new_params, scores = round_body(params, sub, msk,
+                                                jnp.take(ckeys, sel,
+                                                         axis=0))
+                log = {"scores": scores, "participants": sel}
+            if do_eval:
+                due = (round_offset + i + 1) % eval_every == 0
+                loss, acc = jax.lax.cond(
+                    due | (i == n_rounds - 1),
+                    lambda p: tuple(jnp.asarray(v, jnp.float32)
+                                    for v in task.loss_fn(p, eval_batch)),
+                    lambda p: (jnp.full((), jnp.nan, jnp.float32),) * 2,
+                    new_params)
+                log["eval_loss"], log["eval_acc"] = loss, acc
+            return (new_params, rng), log
+
+        (params, rng), logs = jax.lax.scan(
+            one_round, (global_params, rng), jnp.arange(n_rounds))
+        return params, rng, logs
+
+    return jax.jit(block_fn,
+                   donate_argnums=_donate_argnums(donate, argnums=(0, 1)))
 
 
 class BatchedRoundEngine:
@@ -314,6 +443,9 @@ class BatchedRoundEngine:
         self.is_fedx = strategy.is_fedx
         spec = vectorize if vectorize is not None else hp.vectorize
         self.vectorize = resolve_vectorize(spec)
+        self._task, self._strategy, self._hp, self._spec = (
+            task, strategy, hp, spec)
+        self._fused = {}
         self.traced_participant_counts: List[int] = []
         if self.is_fedx:
             self.n_participants = self.n_clients
@@ -325,6 +457,34 @@ class BatchedRoundEngine:
             self._round = make_batched_fedavg_round(
                 task, hp, vectorize=spec, masked=self.padded,
                 on_trace=self.traced_participant_counts.append)
+
+    def fused_rounds(self, rounds_per_dispatch: int, eval_every: int = 0):
+        """The R-round fused block function (:func:`make_fused_rounds`)
+        for this engine's task/strategy/data layout, cached per
+        ``(rounds_per_dispatch, eval_every)`` so each block shape
+        compiles once."""
+        key = (int(rounds_per_dispatch), int(eval_every))
+        fn = self._fused.get(key)
+        if fn is None:
+            fn = make_fused_rounds(
+                self._task, self._strategy, self._hp, key[0],
+                n_clients=self.n_clients, vectorize=self._spec,
+                masked=self.padded, eval_every=key[1],
+                on_trace=self.traced_participant_counts.append)
+            self._fused[key] = fn
+        return fn
+
+    def run_block(self, global_params, rng, rounds_per_dispatch: int,
+                  eval_batch=None, eval_every: int = 0,
+                  round_offset: int = 0):
+        """Dispatch one fused block: ``-> (params, rng, logs)`` with
+        ``logs`` the stacked per-round device arrays (one host sync for
+        the whole block when the caller fetches them)."""
+        block = self.fused_rounds(
+            rounds_per_dispatch,
+            eval_every if eval_batch is not None else 0)
+        return block(global_params, rng, self.data, self.mask,
+                     eval_batch, jnp.asarray(round_offset, jnp.int32))
 
     def fedx_round(self, global_params, keys):
         """-> (winner_params, scores, best_idx); one dispatch, no sync."""

@@ -15,10 +15,40 @@ for ``auto`` when it resolves to scan.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 ENGINES = ("auto", "batched", "sequential")
 VECTORIZE_MODES = ("auto", "vmap", "scan", "unroll")
+
+# Measured default for rounds_per_dispatch="auto" on the batched engine
+# (DESIGN.md §6): enough rounds to amortize the per-dispatch host
+# round-trip without block-sized compile blowup or coarse stopping.
+DEFAULT_ROUNDS_PER_DISPATCH = 5
+
+
+def parse_rounds_per_dispatch(spec: Union[int, str, None]) -> Optional[int]:
+    """``"auto"``/``None`` -> ``None`` (the server resolves it against
+    the engine policy: 1 when the round engine is sequential — e.g. conv
+    tasks on CPU, DESIGN.md §4 — else the measured
+    ``DEFAULT_ROUNDS_PER_DISPATCH``); anything else must be a positive
+    integer round count."""
+    if spec is None or spec == "auto":
+        return None
+    try:
+        r = int(str(spec))     # rejects non-integral floats like 1.5
+    except ValueError:
+        raise ValueError(
+            f"rounds_per_dispatch={spec!r} must be 'auto' or a positive "
+            f"integer")
+    if r < 1:
+        raise ValueError(
+            f"rounds_per_dispatch={spec!r} must be >= 1")
+    return r
+
+
+def validate_rounds_per_dispatch(spec):
+    parse_rounds_per_dispatch(spec)
+    return spec
 
 
 def validate_engine(name: str) -> str:

@@ -3,10 +3,21 @@
 1. no significant improvement for ``t`` consecutive rounds,
 2. accuracy above threshold ``tau``,
 3. round limit reached.
+
+When the server runs with ``rounds_per_dispatch > 1`` on the batched
+engine, the driver dispatches *blocks* of rounds through
+``Server.run_block`` — one XLA program and one device->host sync per
+block, with eval folded into the device program at the ``eval_every``
+cadence (DESIGN.md §6).  Stopping conditions are still checked per
+evaluated round, but a dispatched block is atomic: if tau/patience
+triggers mid-block, the remaining rounds of that block have already run
+(and are logged/accounted) — the fused path trades stopping granularity
+for dispatch overhead.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -34,26 +45,71 @@ class RoundLog:
 
 
 def run_federated(server: Server, eval_data, stop: StopConditions,
-                  verbose: bool = False) -> List[RoundLog]:
+                  verbose: bool = False,
+                  eval_every: int = 1) -> List[RoundLog]:
+    """Drive ``server`` to a stopping condition.
+
+    ``eval_every``: evaluate the global model every k-th round (1 =
+    every round, the paper's cadence).  Skipped rounds log NaN
+    loss/accuracy and don't advance the patience counter.  On the fused
+    path the cadence runs *inside* the device program; the driver also
+    always gets an eval at each block boundary so stopping decisions
+    never act on stale accuracy.
+    """
     logs: List[RoundLog] = []
     best_acc, stale = -1.0, 0
-    for rnd in range(stop.max_rounds):
-        t0 = time.perf_counter()
-        info = server.run_round()
-        # block on the new global model so round_time_s measures device
-        # work, not dispatch (round 0 additionally includes compilation)
-        jax.block_until_ready(server.global_params)
-        t_round = time.perf_counter() - t0
-        loss, acc = server.evaluate(eval_data)
-        dt = time.perf_counter() - t0
-        logs.append(RoundLog(rnd, loss, acc, dt, info, t_round))
-        if verbose:
-            print(f"  round {rnd:3d}  loss={loss:.4f} acc={acc:.4f} "
-                  f"({dt:.2f}s) {info if rnd < 2 else ''}")
+    rpd = int(getattr(server, "rounds_per_dispatch", 1))
+    fused = rpd > 1 and getattr(server, "engine", "sequential") == "batched"
+    rnd, stop_now = 0, False
+
+    def check_stop(acc):
+        nonlocal best_acc, stale
+        if math.isnan(acc):
+            return False
         if acc > best_acc + stop.min_delta:
             best_acc, stale = acc, 0
         else:
             stale += 1
-        if acc >= stop.tau or stale >= stop.patience:
-            break
+        return acc >= stop.tau or stale >= stop.patience
+
+    while rnd < stop.max_rounds and not stop_now:
+        if fused and stop.max_rounds - rnd >= rpd:
+            # one dispatch + one log sync for the whole block; leftover
+            # rounds (< rpd) fall through to the single-round path below
+            # so only one block shape ever compiles
+            t0 = time.perf_counter()
+            infos = server.run_block(rpd, eval_data, eval_every=eval_every)
+            jax.block_until_ready(server.global_params)
+            dt = time.perf_counter() - t0
+            for info in infos:
+                loss = info.pop("eval_loss", float("nan"))
+                acc = info.pop("eval_acc", float("nan"))
+                logs.append(RoundLog(rnd, loss, acc, dt / rpd, info,
+                                     dt / rpd))
+                if verbose:
+                    print(f"  round {rnd:3d}  loss={loss:.4f} "
+                          f"acc={acc:.4f} ({dt / rpd:.2f}s amortized) "
+                          f"{info if rnd < 2 else ''}")
+                stop_now = check_stop(acc) or stop_now
+                rnd += 1
+        else:
+            t0 = time.perf_counter()
+            info = server.run_round()
+            # block on the new global model so round_time_s measures
+            # device work, not dispatch (round 0 additionally includes
+            # compilation)
+            jax.block_until_ready(server.global_params)
+            t_round = time.perf_counter() - t0
+            if (rnd + 1) % max(eval_every, 1) == 0 \
+                    or rnd == stop.max_rounds - 1:
+                loss, acc = server.evaluate(eval_data)
+            else:
+                loss, acc = float("nan"), float("nan")
+            dt = time.perf_counter() - t0
+            logs.append(RoundLog(rnd, loss, acc, dt, info, t_round))
+            if verbose:
+                print(f"  round {rnd:3d}  loss={loss:.4f} acc={acc:.4f} "
+                      f"({dt:.2f}s) {info if rnd < 2 else ''}")
+            stop_now = check_stop(acc)
+            rnd += 1
     return logs

@@ -21,11 +21,18 @@ accounting:
                  for genuinely unstackable client datasets (mismatched
                  structures/shapes/dtypes) and as the baseline for the
                  engine-parity tests/benchmarks.
+
+On top of the batched engine, ``rounds_per_dispatch > 1`` fuses whole
+*blocks* of rounds into one XLA program (``run_block``,
+:func:`repro.core.engine.make_fused_rounds`): the threefry key schedule
+moves on device bit-exactly, eval runs at an on-device cadence, and the
+host pays one dispatch + one log sync per R rounds (DESIGN.md §6).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+import math
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +41,8 @@ import numpy as np
 from repro.core.client import ClientHP, Task, make_client_update
 from repro.core.comm import CommMeter
 from repro.core.engine import BatchedRoundEngine, task_uses_conv
-from repro.core.knobs import ENGINES, validate_engine
+from repro.core.knobs import (DEFAULT_ROUNDS_PER_DISPATCH, ENGINES,
+                              parse_rounds_per_dispatch, validate_engine)
 from repro.metaheuristics import REGISTRY, Metaheuristic
 
 
@@ -66,12 +74,23 @@ class Server:
     traversal is a measured win for the task/backend; on CPU conv tasks
     stay sequential, see DESIGN.md §4), "batched" (forced), or
     "sequential".
+
+    ``rounds_per_dispatch``: how many rounds one device dispatch
+    executes (DESIGN.md §6).  1 = the classic one-dispatch-per-round
+    loop; R > 1 fuses blocks of R rounds into a single XLA program via
+    :func:`repro.core.engine.make_fused_rounds` (``run_block``), paying
+    one host round-trip per block.  "auto" resolves to 1 whenever the
+    round engine is sequential (conv tasks on CPU per the §4 policy —
+    there is no batched program to fuse) and to the measured
+    ``knobs.DEFAULT_ROUNDS_PER_DISPATCH`` otherwise.
     """
 
     def __init__(self, task: Task, strategy: Strategy, hp: ClientHP,
                  client_data: Sequence[Any], rng: jax.Array,
-                 model_bytes: Optional[int] = None, engine: str = "auto"):
+                 model_bytes: Optional[int] = None, engine: str = "auto",
+                 rounds_per_dispatch: Union[int, str] = 1):
         validate_engine(engine)
+        rpd = parse_rounds_per_dispatch(rounds_per_dispatch)
         self.task = task
         self.strategy = strategy
         self.hp = hp
@@ -104,17 +123,93 @@ class Server:
                     if engine == "batched":
                         raise
         self.engine = "batched" if self._engine is not None else "sequential"
+        # auto: fuse only where there is a batched round program to fuse
+        # (the §4 conv-on-CPU policy has already resolved to sequential)
+        if rpd is None:
+            rpd = (DEFAULT_ROUNDS_PER_DISPATCH
+                   if self._engine is not None else 1)
+        self.rounds_per_dispatch = rpd
+        self.rounds_completed = 0
         self._update = None
         if self._engine is None:
             self._update = jax.jit(make_client_update(task, hp, strategy.mh))
+        # cache the jitted eval fn once: jax.jit(task.loss_fn) per
+        # evaluate() call would re-trace and re-compile every round
+        self._eval = jax.jit(task.loss_fn)
 
     # ------------------------------------------------------------ round --
     def run_round(self) -> dict:
         keys = jax.random.split(self.rng, self.n_clients + 2)
         self.rng, sel_key, ckeys = keys[0], keys[1], keys[2:]
+        self.rounds_completed += 1
         if self._engine is not None:
             return self._run_round_batched(sel_key, ckeys)
         return self._run_round_sequential(sel_key, ckeys)
+
+    # ------------------------------------------------------------ block --
+    def run_block(self, n_rounds: Optional[int] = None, eval_data=None,
+                  eval_every: int = 1) -> List[dict]:
+        """Run ``n_rounds`` (default: ``rounds_per_dispatch``) rounds as
+        ONE fused device dispatch (engine="batched") and return one info
+        dict per round, in ``run_round``'s format plus ``eval_loss`` /
+        ``eval_acc`` entries on rounds the ``eval_every`` cadence (and
+        the block's final round) evaluated on device.
+
+        The fused program carries ``(global_params, rng)`` across rounds
+        with the server's exact host key schedule derived on device, so
+        a block is bit-identical to ``n_rounds`` ``run_round`` calls —
+        including the CommMeter ledger, reconstructed per round by
+        ``CommMeter.record_rounds``.  The whole block costs one
+        device->host sync (the stacked round logs).
+
+        On the sequential engine this degrades gracefully to a loop of
+        ``run_round`` + cadenced ``evaluate`` with the same return
+        shape.
+        """
+        n_rounds = int(n_rounds or self.rounds_per_dispatch)
+        if self._engine is None:
+            infos = []
+            for i in range(n_rounds):
+                info = self.run_round()
+                if eval_data is not None and eval_every > 0 and (
+                        self.rounds_completed % eval_every == 0
+                        or i == n_rounds - 1):
+                    loss, acc = self.evaluate(eval_data)
+                    info["eval_loss"], info["eval_acc"] = loss, acc
+                infos.append(info)
+            return infos
+        params, rng, logs = self._engine.run_block(
+            self.global_params, self.rng, n_rounds, eval_batch=eval_data,
+            eval_every=eval_every, round_offset=self.rounds_completed)
+        self.global_params, self.rng = params, rng
+        self.rounds_completed += n_rounds
+        if self.strategy.is_fedx:
+            self.meter.record_rounds(self.strategy, n_rounds,
+                                     fetched_model=True)
+        else:
+            self.meter.record_rounds(
+                self.strategy, n_rounds,
+                n_participants=self._engine.n_participants)
+        # the block's single device->host sync
+        out = jax.device_get(logs)
+        infos = []
+        for r in range(n_rounds):
+            if self.strategy.is_fedx:
+                scores = out["scores"][r]
+                best = int(out["best"][r])
+                info = {"best_client": best, "score": float(scores[best]),
+                        "scores": [float(s) for s in scores],
+                        "engine": "fused"}
+            else:
+                info = {"participants": [int(k)
+                                         for k in out["participants"][r]],
+                        "engine": "fused"}
+            if "eval_loss" in out and not math.isnan(
+                    float(out["eval_loss"][r])):
+                info["eval_loss"] = float(out["eval_loss"][r])
+                info["eval_acc"] = float(out["eval_acc"][r])
+            infos.append(info)
+        return infos
 
     def _run_round_batched(self, sel_key, ckeys) -> dict:
         if self.strategy.is_fedx:
@@ -168,5 +263,5 @@ class Server:
 
     # ------------------------------------------------------------- eval --
     def evaluate(self, eval_data) -> Tuple[float, float]:
-        loss, acc = jax.jit(self.task.loss_fn)(self.global_params, eval_data)
+        loss, acc = self._eval(self.global_params, eval_data)
         return float(loss), float(acc)

@@ -12,7 +12,9 @@ import json
 
 from repro.core import FLConfig, build_experiment
 from repro.core.api import strategy_names, PARTITIONS, TASKS
-from repro.core.knobs import validate_engine, validate_vectorize
+from repro.core.knobs import (validate_engine,
+                              validate_rounds_per_dispatch,
+                              validate_vectorize)
 
 
 def main():
@@ -49,6 +51,14 @@ def main():
                     help="client-axis traversal inside the batched "
                          "engine (auto: scan on CPU, vmap elsewhere; "
                          "scan:k chunks the scan with unroll=k)")
+    ap.add_argument("--rounds-per-dispatch", default="1",
+                    type=validate_rounds_per_dispatch, metavar="auto|R",
+                    help="fuse R rounds into one device dispatch with "
+                         "one host sync per block (batched engine only; "
+                         "auto = measured default, DESIGN.md §6)")
+    ap.add_argument("--eval-every", type=int, default=1, metavar="K",
+                    help="evaluate the global model every K-th round; "
+                         "fused blocks run the cadence on device")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -60,10 +70,13 @@ def main():
         batch_size=args.batch, local_epochs=args.local_epochs, lr=args.lr,
         mh_pop=args.pop, mh_generations=args.generations,
         engine=args.engine, vectorize=args.vectorize,
+        rounds_per_dispatch=args.rounds_per_dispatch,
+        eval_every=args.eval_every,
         max_rounds=args.rounds, tau=args.tau)
     exp = build_experiment(cfg)
     print(f"strategy={cfg.strategy} clients={cfg.n_clients} "
           f"partition={cfg.partition} engine={exp.server.engine} "
+          f"rounds_per_dispatch={exp.server.rounds_per_dispatch} "
           f"model_bytes={exp.meter.model_bytes:,}")
     result = exp.run(verbose=True)
 

@@ -72,6 +72,35 @@ def test_meter_summary_details():
          "downlink_bytes": 5 * 1000}]
 
 
+def test_record_rounds_block_equals_single_round_recordings():
+    """The fused engine's block recording must reconstruct the exact
+    per-round ledger: n single-round recordings, entry for entry."""
+    single = CommMeter(model_bytes=1000, n_clients=10)
+    block = CommMeter(model_bytes=1000, n_clients=10)
+    for _ in range(5):
+        single.record_fedx_round()
+    block.record_rounds("fedbwo", 5)
+    assert block.uplink == single.uplink
+    assert block.downlink == single.downlink
+    assert block.summary() == single.summary()
+
+    for _ in range(3):
+        single.record_fedavg_round(4)
+    block.record_rounds("fedavg", 3, n_participants=4)
+    assert block.uplink == single.uplink
+    assert block.summary() == single.summary()
+
+    # Strategy-like objects (duck-typed is_fedx) work too
+    class S:
+        is_fedx = True
+    single.record_fedx_round(fetched_model=False)
+    block.record_rounds(S(), 1, fetched_model=False)
+    assert block.summary() == single.summary()
+
+    with pytest.raises(TypeError):
+        block.record_rounds("fedavg", 2)   # needs n_participants
+
+
 def test_normalized_cost_accepts_meter():
     meter = CommMeter(model_bytes=10**7, n_clients=10)
     for _ in range(4):
