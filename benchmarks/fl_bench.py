@@ -7,6 +7,8 @@ Fig. 6  communication cost       -> bench_comm_cost (Eqs. 1-4)
 Fig. 7  execution time           -> bench_exec_time
 plus    round-engine comparison  -> bench_round_engine (sequential vs
                                     batched one-dispatch rounds)
+plus    block pipeline           -> bench_pipelined_blocks (serial vs
+                                    double-buffered fused-block driver)
 
 Scale knobs (1-core CPU container): REPRO_BENCH_TRAIN, REPRO_BENCH_ROUNDS,
 REPRO_BENCH_CLIENTS, REPRO_BENCH_EPOCHS, REPRO_BENCH_ENGINE
@@ -288,6 +290,102 @@ def bench_fused_rounds() -> List[tuple]:
                "strategy": "fedbwo", "task": "mlp",
                "eval_every": 1, "sweep": results}
     with open("BENCH_fused_rounds.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    return rows
+
+
+def bench_pipelined_blocks() -> List[tuple]:
+    """Double-buffered block pipeline (DESIGN.md §7): serial run_block
+    loop vs ``run_pipelined`` on FedBWO x ``mlp_task``, batched engine,
+    rounds_per_dispatch=5.
+
+    Both drivers execute identical device programs (the parity tests
+    prove bit-exactness); the pipeline only moves host-side block
+    overhead — dispatch, the log `device_get`, info/meter processing —
+    off the critical path by keeping one block in flight.  On a 1-core
+    CPU container "device" compute shares the core with the host, so
+    the expected result is parity within noise (the hideable host work
+    is a few ms per ~seconds-long block); the overlap mechanism itself
+    is visible in the BlockTiming ledger as the pipelined driver's
+    sync_fraction dropping well below the serial driver's ~1.0.  To
+    resolve a few-percent effect under container timing noise the
+    drivers run interleaved and report best-of-``REPRO_BENCH_PIPE_TRIALS``
+    (default 4).  Full numbers land in ``BENCH_pipelined_blocks.json``.
+    """
+    from repro.data import mlp_task
+
+    R = 5
+    n_blocks = max(2, int(os.environ.get("REPRO_BENCH_PIPE_BLOCKS", 6)))
+    trials = max(1, int(os.environ.get("REPRO_BENCH_PIPE_TRIALS", 4)))
+    # lighter than the figure runs: per-block host overhead is fixed,
+    # so a smaller device program makes the effect proportionally larger
+    n_train = min(N_TRAIN, 240)
+    rng = jax.random.PRNGKey(0)
+    train, test = make_cifar_like(rng, n_train, 16)
+    clients = client_batches(
+        partition_iid(jax.random.PRNGKey(1), train, N_CLIENTS), BATCH)
+    task = mlp_task()
+
+    servers, results, rows = {}, {}, []
+    for mode in ("serial", "pipelined"):
+        cfg = FLConfig(strategy="fedbwo", task="mlp", engine="batched",
+                       n_clients=N_CLIENTS, batch_size=BATCH,
+                       local_epochs=LOCAL_EPOCHS, mh_pop=2,
+                       mh_generations=1, rounds_per_dispatch=R,
+                       pipeline_blocks=(mode == "pipelined"))
+        server = build_experiment(cfg, task=task, client_data=clients,
+                                  eval_data=test).server
+        # pay XLA compilation outside the timed region
+        t0 = time.perf_counter()
+        server.run_block(R, eval_data=test, eval_every=1)
+        jax.block_until_ready(server.global_params)
+        servers[mode] = server
+        results[mode] = {"compile_s": time.perf_counter() - t0,
+                         "trial_round_s": [], "blocks_per_trial": n_blocks,
+                         "rounds_per_dispatch": R}
+
+    for trial in range(trials):
+        order = ("serial", "pipelined") if trial % 2 == 0 \
+            else ("pipelined", "serial")
+        for mode in order:
+            server = servers[mode]
+            t0 = time.perf_counter()
+            if mode == "pipelined":
+                server.run_pipelined(n_blocks * R, eval_data=test,
+                                     eval_every=1)
+            else:
+                for _ in range(n_blocks):
+                    server.run_block(R, eval_data=test, eval_every=1)
+            jax.block_until_ready(server.global_params)
+            results[mode]["trial_round_s"].append(
+                (time.perf_counter() - t0) / (n_blocks * R))
+
+    for mode in ("serial", "pipelined"):
+        entry = results[mode]
+        entry["steady_round_s"] = min(entry["trial_round_s"])
+        # ledger spans compile + all trials; sync_fraction is the story
+        entry["timing"] = servers[mode].meter.timing_summary()
+        print(f"  [pipe:{mode}] first={entry['compile_s']:.2f}s "
+              f"best={entry['steady_round_s']:.3f}s/round "
+              f"(trials {[round(t, 3) for t in entry['trial_round_s']]}) "
+              f"sync_fraction={entry['timing']['sync_fraction']:.2f}",
+              flush=True)
+    speedup = (results["serial"]["steady_round_s"]
+               / results["pipelined"]["steady_round_s"])
+    results["pipelined"]["speedup_vs_serial"] = round(speedup, 4)
+    for mode in ("serial", "pipelined"):
+        rows.append((f"pipelined_blocks/{mode}_steady",
+                     results[mode]["steady_round_s"] * 1e6,
+                     results[mode]["timing"]["sync_fraction"]))
+    rows.append(("pipelined_blocks/speedup",
+                 results["pipelined"]["steady_round_s"] * 1e6,
+                 round(speedup, 4)))
+    payload = {"config": dict(_bench_config(), train=n_train),
+               "backend": jax.default_backend(),
+               "strategy": "fedbwo", "task": "mlp",
+               "rounds_per_dispatch": R, "eval_every": 1,
+               "trials": trials, "results": results}
+    with open("BENCH_pipelined_blocks.json", "w") as f:
         json.dump(payload, f, indent=1)
     return rows
 

@@ -6,6 +6,7 @@
 #   fig7_exec_time/*  — paper Fig. 7 (normalized execution time)
 #   round_engine/*    — sequential vs batched one-dispatch round engine
 #   fused_rounds/*    — rounds_per_dispatch sweep (one dispatch per R rounds)
+#   pipelined_blocks/* — double-buffered block pipeline vs serial driver
 #   roofline/*        — §Roofline terms per (arch x shape x mesh) dry-run
 #   kernel/*          — Pallas kernel micro-benchmarks
 import sys
@@ -16,13 +17,15 @@ def main() -> None:
     from benchmarks.fl_bench import (bench_accuracy, bench_comm_cost,
                                      bench_exec_time, bench_fused_rounds,
                                      bench_loss, bench_noniid_ablation,
+                                     bench_pipelined_blocks,
                                      bench_round_engine)
     from benchmarks.kernel_bench import bench_kernels
     from benchmarks.roofline_bench import bench_roofline
 
     benches = [bench_kernels, bench_roofline, bench_accuracy, bench_loss,
                bench_comm_cost, bench_exec_time, bench_noniid_ablation,
-               bench_round_engine, bench_fused_rounds]
+               bench_round_engine, bench_fused_rounds,
+               bench_pipelined_blocks]
     print("name,us_per_call,derived")
     failures = 0
     for bench in benches:

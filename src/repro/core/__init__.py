@@ -7,30 +7,40 @@ the one construction path for experiments; the lower-level pieces
 (``Server``, ``ClientHP``, the round engines) remain directly usable.
 """
 from repro.core.client import ClientHP, Task, make_client_update
-from repro.core.comm import (CommMeter, fedavg_total, fedx_total,
-                             normalized_cost, SCORE_BYTES)
+from repro.core.comm import (BlockTiming, CommMeter, fedavg_total,
+                             fedx_total, normalized_cost, SCORE_BYTES)
 from repro.core.engine import (BatchedRoundEngine, make_batched_fedavg_round,
                                make_batched_fedx_round, make_fused_rounds,
-                               resolve_vectorize, stack_clients)
-from repro.core.knobs import (DEFAULT_ROUNDS_PER_DISPATCH, ENGINES,
-                              VECTORIZE_MODES, parse_rounds_per_dispatch,
+                               pipeline_blocks, resolve_vectorize,
+                               stack_clients)
+from repro.core.knobs import (DEFAULT_PIPELINE_DEPTH,
+                              DEFAULT_ROUNDS_PER_DISPATCH, ENGINES,
+                              PIPELINE_MODES, VECTORIZE_MODES,
+                              parse_pipeline_blocks,
+                              parse_rounds_per_dispatch,
                               parse_vectorize, validate_engine,
+                              validate_pipeline_blocks,
                               validate_rounds_per_dispatch,
                               validate_vectorize)
 from repro.core.protocol import RoundLog, StopConditions, run_federated
-from repro.core.server import Server, Strategy, get_strategy
+from repro.core.server import (PendingBlock, PipelineResult, Server,
+                               Strategy, get_strategy)
 from repro.core.api import (Experiment, ExperimentResult, FLConfig,
                             build_experiment)
 
-__all__ = ["ClientHP", "Task", "make_client_update", "CommMeter",
+__all__ = ["ClientHP", "Task", "make_client_update", "BlockTiming",
+           "CommMeter",
            "fedavg_total", "fedx_total", "normalized_cost", "SCORE_BYTES",
            "BatchedRoundEngine", "make_batched_fedavg_round",
            "make_batched_fedx_round", "make_fused_rounds",
-           "resolve_vectorize", "stack_clients",
-           "DEFAULT_ROUNDS_PER_DISPATCH", "ENGINES", "VECTORIZE_MODES",
-           "parse_rounds_per_dispatch", "parse_vectorize",
-           "validate_engine", "validate_rounds_per_dispatch",
+           "pipeline_blocks", "resolve_vectorize", "stack_clients",
+           "DEFAULT_PIPELINE_DEPTH", "DEFAULT_ROUNDS_PER_DISPATCH",
+           "ENGINES", "PIPELINE_MODES", "VECTORIZE_MODES",
+           "parse_pipeline_blocks", "parse_rounds_per_dispatch",
+           "parse_vectorize", "validate_engine",
+           "validate_pipeline_blocks", "validate_rounds_per_dispatch",
            "validate_vectorize",
            "RoundLog", "StopConditions", "run_federated",
-           "Server", "Strategy", "get_strategy",
+           "PendingBlock", "PipelineResult", "Server", "Strategy",
+           "get_strategy",
            "Experiment", "ExperimentResult", "FLConfig", "build_experiment"]

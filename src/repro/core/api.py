@@ -24,8 +24,9 @@ from typing import Any, List, Optional
 import jax
 
 from repro.core.client import ClientHP, Task
-from repro.core.comm import normalized_cost
+from repro.core.comm import fedavg_total, normalized_cost
 from repro.core.knobs import (validate_engine,
+                              validate_pipeline_blocks,
                               validate_rounds_per_dispatch,
                               validate_vectorize)
 from repro.core.protocol import RoundLog, StopConditions, run_federated
@@ -69,6 +70,13 @@ class FLConfig:
     # block (DESIGN.md §6); "auto" = measured default on the batched
     # engine, 1 on the sequential fallback
     rounds_per_dispatch: Any = 1
+    # double-buffer fused block dispatches against host-side log
+    # processing ("auto" | "on" | "off" | bool, DESIGN.md §7): block
+    # k+1 runs on device while block k's logs sync and the stopping
+    # conditions are checked (one-block stopping overshoot, trimmed
+    # from the logs); "auto" pipelines whenever there is a fused
+    # batched block to overlap
+    pipeline_blocks: Any = "auto"
     # evaluate the global model every k-th round; with fused blocks the
     # cadence runs on device, so skipped evals cost neither compute nor
     # a sync (block boundaries always evaluate)
@@ -84,6 +92,7 @@ class FLConfig:
         validate_engine(self.engine)
         validate_vectorize(self.vectorize)
         validate_rounds_per_dispatch(self.rounds_per_dispatch)
+        validate_pipeline_blocks(self.pipeline_blocks)
         if self.eval_every < 1:
             raise ValueError(f"eval_every={self.eval_every} must be >= 1")
         if self.task not in TASKS:
@@ -148,7 +157,8 @@ def build_experiment(cfg: FLConfig, *, task: Optional[Task] = None,
                     hp if hp is not None else cfg.client_hp(),
                     client_data, jax.random.PRNGKey(cfg.server_seed),
                     engine=cfg.engine,
-                    rounds_per_dispatch=cfg.rounds_per_dispatch)
+                    rounds_per_dispatch=cfg.rounds_per_dispatch,
+                    pipeline_blocks=cfg.pipeline_blocks)
     return Experiment(cfg=cfg, server=server, eval_data=eval_data,
                       stop=cfg.stop_conditions())
 
@@ -180,20 +190,30 @@ class ExperimentResult:
     logs: List[RoundLog]
 
     def summary(self, fedavg_rounds: int = 30) -> dict:
-        """Headline numbers plus the full CommMeter ledger; the Eq. 4
+        """Headline numbers plus the full CommMeter ledger; the
         normalized cost is computed against a ``fedavg_rounds``-round
-        FedAvg baseline (paper default: 30)."""
+        full-participation FedAvg baseline (paper default: 30).  FedX
+        runs use Eq. 4 straight off the meter; FedAvg runs — whose
+        rounds Eq. 4 must not price at FedX rates, see
+        ``normalized_cost`` — use their recorded uplink over the
+        baseline's (the Fig. 6 convention)."""
         meter = self.server.meter
+        if self.server.strategy.is_fedx:
+            cost = normalized_cost(meter, t_avg=fedavg_rounds)
+        else:
+            cost = meter.total_uplink / max(1, fedavg_total(
+                fedavg_rounds, 1.0, meter.n_clients, meter.model_bytes))
         return {
             "strategy": self.cfg.strategy,
             "task": self.cfg.task,
             "partition": self.cfg.partition,
             "engine": self.server.engine,
             "rounds_per_dispatch": self.server.rounds_per_dispatch,
+            "pipeline_blocks": self.server.pipeline_blocks,
             "rounds": len(self.logs),
             "final_acc": self.logs[-1].test_acc,
             "final_loss": self.logs[-1].test_loss,
             "comm": meter.summary(),
-            f"normalized_cost_vs_fedavg{fedavg_rounds}":
-                normalized_cost(meter, t_avg=fedavg_rounds),
+            "block_timing": meter.timing_summary(),
+            f"normalized_cost_vs_fedavg{fedavg_rounds}": cost,
         }

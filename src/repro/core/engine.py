@@ -39,6 +39,7 @@ placements of one round-builder.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -136,7 +137,12 @@ def stack_clients(client_data: Sequence[Any], pad: bool = False):
     (batch-count) axes — e.g. a Dirichlet split — are zero-padded to the
     longest client, and ``mask`` is a ``(n_clients, max_batches)`` bool
     array marking the valid rows (all-True when the clients were already
-    uniform).  ``(None, None)`` when the clients are genuinely
+    uniform).  A zero-length leading axis (a client that received no
+    batches at all, possible under extreme Dirichlet skew) is handled
+    like any other ragged length: padded up to the longest client with
+    an all-``False`` mask row — callers that cannot train an empty
+    client (e.g. :class:`BatchedRoundEngine`) detect those rows and
+    raise.  ``(None, None)`` when the clients are genuinely
     unstackable: mismatched tree structures, trailing batch shapes,
     dtypes, or inconsistent leading dims within one client.
     """
@@ -179,20 +185,31 @@ def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _donate_argnums(enabled: bool = True, argnums: Tuple[int, ...] = (0,)):
-    # buffer donation is a no-op (plus a warning per call) on CPU
-    return argnums if enabled and jax.default_backend() != "cpu" else ()
+def _donate_argnums(enabled: bool = True, argnums: Tuple[int, ...] = (0,),
+                    backend: Optional[str] = None):
+    """Donation argnums for the round/block jits on ``backend``.
+
+    Buffer donation is a no-op (plus a warning per call) on CPU, so it
+    is only enabled elsewhere.  The backend is resolved *here, per
+    build* — callers that know their target backend pass it explicitly
+    (mirroring :func:`resolve_vectorize`), so a round function built
+    under a non-default backend context doesn't bake in the donation
+    decision of whatever ``jax.default_backend()`` said at build time.
+    """
+    backend = backend or jax.default_backend()
+    return argnums if enabled and backend != "cpu" else ()
 
 
 # ------------------------------------------------------------ batched --
 def _fedx_round_body(task: Task, hp: ClientHP, mh: Metaheuristic,
-                     vectorize: str = "auto", masked: bool = False):
+                     vectorize: str = "auto", masked: bool = False,
+                     backend: Optional[str] = None):
     """Un-jitted FedX round: ``round_fn(global_params, data, mask, keys)
     -> (best_params, scores, best_idx)``.  Jitted standalone by
     :func:`make_batched_fedx_round`; traced inline by the multi-round
     fusion (:func:`make_fused_rounds`) so one XLA program spans a whole
     block of rounds."""
-    mode = resolve_vectorize(vectorize)
+    mode = resolve_vectorize(vectorize, backend)
     client_update = make_client_update(task, hp, mh, masked=masked)
     update = (client_update if masked
               else lambda p, d, m, k: client_update(p, d, k))
@@ -229,7 +246,8 @@ def _fedx_round_body(task: Task, hp: ClientHP, mh: Metaheuristic,
 
 def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
                             vectorize: str = "auto", donate: bool = True,
-                            masked: bool = False):
+                            masked: bool = False,
+                            backend: Optional[str] = None):
     """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
     (best_params, scores, best_idx)``.
 
@@ -239,18 +257,23 @@ def make_batched_fedx_round(task: Task, hp: ClientHP, mh: Metaheuristic,
     (``masked=False`` — an empty pytree arg, so both builds share one
     signature).
     ``keys``: ``(n_clients, 2)`` uint32 PRNG keys, one per client.
+    ``backend``: target backend for the vectorize/donation decisions
+    (default: resolved once here via ``jax.default_backend()``).
     """
-    return jax.jit(_fedx_round_body(task, hp, mh, vectorize, masked),
-                   donate_argnums=_donate_argnums(donate))
+    backend = backend or jax.default_backend()
+    return jax.jit(_fedx_round_body(task, hp, mh, vectorize, masked,
+                                    backend),
+                   donate_argnums=_donate_argnums(donate, backend=backend))
 
 
 def _fedavg_round_body(task: Task, hp: ClientHP, vectorize: str = "auto",
                        masked: bool = False,
-                       on_trace: Optional[Callable[[int], None]] = None):
+                       on_trace: Optional[Callable[[int], None]] = None,
+                       backend: Optional[str] = None):
     """Un-jitted FedAvg round: ``round_fn(global_params, data, mask,
     keys) -> (avg_params, scores)`` over the (already gathered)
     participant axis.  See :func:`_fedx_round_body`."""
-    mode = resolve_vectorize(vectorize)
+    mode = resolve_vectorize(vectorize, backend)
     client_update = make_client_update(task, hp, None, masked=masked)
     update = (client_update if masked
               else lambda p, d, m, k: client_update(p, d, k))
@@ -285,7 +308,8 @@ def make_batched_fedavg_round(task: Task, hp: ClientHP,
                               vectorize: str = "auto", donate: bool = True,
                               masked: bool = False,
                               on_trace: Optional[Callable[[int], None]]
-                              = None):
+                              = None,
+                              backend: Optional[str] = None):
     """Returns jit'd ``round_fn(global_params, data, mask, keys) ->
     (avg_params, scores)``.
 
@@ -295,10 +319,13 @@ def make_batched_fedavg_round(task: Task, hp: ClientHP,
     one executable per distinct ``m`` — a round at ``client_ratio < 1``
     never traces or compiles for the full ``n_clients``.  ``on_trace``
     is called with ``m`` each time a new participant count is traced
-    (compile-cache accounting/tests).
+    (compile-cache accounting/tests).  ``backend`` as in
+    :func:`make_batched_fedx_round`.
     """
-    return jax.jit(_fedavg_round_body(task, hp, vectorize, masked, on_trace),
-                   donate_argnums=_donate_argnums(donate))
+    backend = backend or jax.default_backend()
+    return jax.jit(_fedavg_round_body(task, hp, vectorize, masked, on_trace,
+                                      backend),
+                   donate_argnums=_donate_argnums(donate, backend=backend))
 
 
 # -------------------------------------------------------------- fused --
@@ -306,7 +333,8 @@ def make_fused_rounds(task: Task, strategy, hp: ClientHP,
                       rounds_per_dispatch: int, *, n_clients: int,
                       vectorize: str = "auto", masked: bool = False,
                       eval_every: int = 0, donate: bool = True,
-                      on_trace: Optional[Callable[[int], None]] = None):
+                      on_trace: Optional[Callable[[int], None]] = None,
+                      backend: Optional[str] = None):
     """Fuse ``rounds_per_dispatch`` FL rounds into one XLA dispatch.
 
     Wraps the single-round bodies (:func:`_fedx_round_body` /
@@ -355,14 +383,15 @@ def make_fused_rounds(task: Task, strategy, hp: ClientHP,
     if n_rounds < 1:
         raise ValueError(
             f"rounds_per_dispatch={rounds_per_dispatch!r} must be >= 1")
+    backend = backend or jax.default_backend()
     is_fedx = getattr(strategy, "is_fedx", False)
     if is_fedx:
         round_body = _fedx_round_body(task, hp, strategy.mh, vectorize,
-                                      masked)
+                                      masked, backend)
         m = n_clients
     else:
         round_body = _fedavg_round_body(task, hp, vectorize, masked,
-                                        on_trace)
+                                        on_trace, backend)
         m = max(int(strategy.client_ratio * n_clients), 1)
 
     def block_fn(global_params, rng, data, mask, eval_batch, round_offset):
@@ -406,7 +435,8 @@ def make_fused_rounds(task: Task, strategy, hp: ClientHP,
         return params, rng, logs
 
     return jax.jit(block_fn,
-                   donate_argnums=_donate_argnums(donate, argnums=(0, 1)))
+                   donate_argnums=_donate_argnums(donate, argnums=(0, 1),
+                                                  backend=backend))
 
 
 class BatchedRoundEngine:
@@ -428,7 +458,8 @@ class BatchedRoundEngine:
 
     def __init__(self, task: Task, strategy, hp: ClientHP,
                  client_data: Sequence[Any],
-                 vectorize: Optional[str] = None):
+                 vectorize: Optional[str] = None,
+                 backend: Optional[str] = None):
         stacked, mask = stack_clients(client_data, pad=True)
         if stacked is None:
             raise ValueError(
@@ -436,13 +467,24 @@ class BatchedRoundEngine:
                 "trailing batch shapes, and dtypes must match across "
                 "clients (ragged batch counts alone are fine — they are "
                 "padded and masked)")
+        if mask is not None and not bool(mask.any(axis=1).all()):
+            empty = jnp.where(~mask.any(axis=1))[0].tolist()
+            raise ValueError(
+                f"client shards {empty} are empty (0 batches): an "
+                f"all-padded client has no data to train or score on — "
+                f"extreme Dirichlet skew can starve clients; drop empty "
+                f"shards or repartition before building the engine")
         self.n_clients = len(client_data)
         self.data = stacked
         self.padded = not bool(mask.all())
         self.mask = mask if self.padded else None
         self.is_fedx = strategy.is_fedx
+        # the target backend is resolved once, here, and passed through
+        # every round/block build so vectorize + donation decisions
+        # can't drift with a later jax.default_backend() change
+        self.backend = backend or jax.default_backend()
         spec = vectorize if vectorize is not None else hp.vectorize
-        self.vectorize = resolve_vectorize(spec)
+        self.vectorize = resolve_vectorize(spec, self.backend)
         self._task, self._strategy, self._hp, self._spec = (
             task, strategy, hp, spec)
         self._fused = {}
@@ -450,13 +492,15 @@ class BatchedRoundEngine:
         if self.is_fedx:
             self.n_participants = self.n_clients
             self._round = make_batched_fedx_round(
-                task, hp, strategy.mh, vectorize=spec, masked=self.padded)
+                task, hp, strategy.mh, vectorize=spec, masked=self.padded,
+                backend=self.backend)
         else:
             self.n_participants = max(
                 int(strategy.client_ratio * self.n_clients), 1)
             self._round = make_batched_fedavg_round(
                 task, hp, vectorize=spec, masked=self.padded,
-                on_trace=self.traced_participant_counts.append)
+                on_trace=self.traced_participant_counts.append,
+                backend=self.backend)
 
     def fused_rounds(self, rounds_per_dispatch: int, eval_every: int = 0):
         """The R-round fused block function (:func:`make_fused_rounds`)
@@ -470,7 +514,8 @@ class BatchedRoundEngine:
                 self._task, self._strategy, self._hp, key[0],
                 n_clients=self.n_clients, vectorize=self._spec,
                 masked=self.padded, eval_every=key[1],
-                on_trace=self.traced_participant_counts.append)
+                on_trace=self.traced_participant_counts.append,
+                backend=self.backend)
             self._fused[key] = fn
         return fn
 
@@ -505,6 +550,54 @@ class BatchedRoundEngine:
         avg, scores = self._round(global_params, sub, mask,
                                   jnp.take(keys, sel, axis=0))
         return avg, scores, sel
+
+
+# ----------------------------------------------------------- pipeline --
+def pipeline_blocks(dispatch: Callable[[Any], Any],
+                    finish: Callable[[Any], Any],
+                    schedule, depth: int = 2,
+                    should_stop: Optional[Callable[[Any], bool]] = None):
+    """Generic double-buffered dispatch/finish driver (DESIGN.md §7).
+
+    Pulls block specs lazily from ``schedule``, keeps up to ``depth``
+    dispatched blocks in flight, and finishes them in dispatch order:
+    with ``depth=2`` (classic double buffering) block ``k+1`` is
+    dispatched *before* block ``k`` is finished, so — with an
+    asynchronous dispatch like JAX's — the host work inside ``finish``
+    (device->host sync + log processing) overlaps block ``k+1``'s
+    device execution.
+
+    ``should_stop(result)`` is consulted after each finish; once it
+    returns True no further block is dispatched, but already-dispatched
+    blocks are still finished (their side effects — device state, meter
+    entries — have already happened), giving a worst-case overshoot of
+    ``depth - 1`` blocks.  Returns ``(results, kept, stopped)`` where
+    ``results`` covers every dispatched block in order and ``kept``
+    counts the leading results up to and including the one that
+    triggered the stop (``kept == len(results)`` when nothing did) —
+    callers trim their logs to ``results[:kept]``.
+    """
+    if depth < 1:
+        raise ValueError(f"depth={depth} must be >= 1")
+    pending = deque()
+    results: List[Any] = []
+    it = iter(schedule)
+    stopped = False
+    kept: Optional[int] = None
+    while True:
+        while not stopped and len(pending) < depth:
+            try:
+                spec = next(it)
+            except StopIteration:
+                break
+            pending.append(dispatch(spec))
+        if not pending:
+            break
+        res = finish(pending.popleft())
+        results.append(res)
+        if not stopped and should_stop is not None and should_stop(res):
+            stopped, kept = True, len(results)
+    return results, len(results) if kept is None else kept, stopped
 
 
 # ------------------------------------------------------------ sharded --

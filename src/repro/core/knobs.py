@@ -25,6 +25,42 @@ VECTORIZE_MODES = ("auto", "vmap", "scan", "unroll")
 # round-trip without block-sized compile blowup or coarse stopping.
 DEFAULT_ROUNDS_PER_DISPATCH = 5
 
+# pipeline_blocks knob vocabulary (DESIGN.md §7): double-buffer fused
+# block dispatches against host-side log processing.
+PIPELINE_MODES = ("auto", "on", "off")
+
+# How many blocks may be in flight under the pipelined driver: 2 is
+# classic double buffering — one executing on device while the previous
+# block's logs are processed on host.  Deeper queues only grow the
+# stopping-condition overshoot (one *in-flight* block per slot beyond
+# the first) without hiding more latency.
+DEFAULT_PIPELINE_DEPTH = 2
+
+
+def parse_pipeline_blocks(spec: Union[bool, str, None]) -> Optional[bool]:
+    """``"auto"``/``None`` -> ``None`` (the server resolves it: pipeline
+    exactly when there is a fused batched block to overlap, i.e. the
+    batched engine with ``rounds_per_dispatch > 1``); ``"on"``/``True``
+    -> ``True`` (forced — still requires the batched engine);
+    ``"off"``/``False`` -> ``False``."""
+    if spec is None or spec == "auto":
+        return None
+    if isinstance(spec, bool):
+        return spec
+    low = str(spec).lower()
+    if low in ("on", "true", "1"):
+        return True
+    if low in ("off", "false", "0"):
+        return False
+    raise ValueError(
+        f"pipeline_blocks={spec!r} must be one of {PIPELINE_MODES} "
+        f"(or a bool)")
+
+
+def validate_pipeline_blocks(spec):
+    parse_pipeline_blocks(spec)
+    return spec
+
 
 def parse_rounds_per_dispatch(spec: Union[int, str, None]) -> Optional[int]:
     """``"auto"``/``None`` -> ``None`` (the server resolves it against

@@ -13,6 +13,16 @@ evaluated round, but a dispatched block is atomic: if tau/patience
 triggers mid-block, the remaining rounds of that block have already run
 (and are logged/accounted) — the fused path trades stopping granularity
 for dispatch overhead.
+
+With ``server.pipeline_blocks`` on, the fused blocks are additionally
+double-buffered (``Server.run_pipelined``, DESIGN.md §7): block k+1 is
+dispatched before block k's logs are fetched, so host-side log
+processing and stopping checks overlap device execution.  The cost is
+one more block of stopping overshoot: when tau/patience triggers in
+block k, block k+1 is already in flight and completes (it advances the
+server's params/round counter/meter), but its rounds are trimmed from
+the returned logs — the log list still ends at the triggering block,
+exactly like the serial fused driver's.
 """
 from __future__ import annotations
 
@@ -60,6 +70,7 @@ def run_federated(server: Server, eval_data, stop: StopConditions,
     best_acc, stale = -1.0, 0
     rpd = int(getattr(server, "rounds_per_dispatch", 1))
     fused = rpd > 1 and getattr(server, "engine", "sequential") == "batched"
+    pipelined = fused and bool(getattr(server, "pipeline_blocks", False))
     rnd, stop_now = 0, False
 
     def check_stop(acc):
@@ -73,7 +84,33 @@ def run_federated(server: Server, eval_data, stop: StopConditions,
         return acc >= stop.tau or stale >= stop.patience
 
     while rnd < stop.max_rounds and not stop_now:
-        if fused and stop.max_rounds - rnd >= rpd:
+        if pipelined and stop.max_rounds - rnd >= rpd:
+            # double-buffered: all remaining full blocks in one
+            # pipelined drive; block k's log processing + stopping
+            # checks overlap block k+1's device execution.  If a stop
+            # triggers, the in-flight block completes (one-block
+            # overshoot on the server's state/meter) but its rounds are
+            # trimmed from the logs; leftover rounds (< rpd) fall
+            # through to the single-round path below.
+            n = ((stop.max_rounds - rnd) // rpd) * rpd
+            t0 = time.perf_counter()
+            res = server.run_pipelined(
+                n, eval_data, eval_every=eval_every,
+                stop_fn=lambda info: check_stop(
+                    info.get("eval_acc", float("nan"))))
+            jax.block_until_ready(server.global_params)
+            dt = (time.perf_counter() - t0) / max(len(res.infos), 1)
+            for info in res.infos[:res.kept]:
+                loss = info.pop("eval_loss", float("nan"))
+                acc = info.pop("eval_acc", float("nan"))
+                logs.append(RoundLog(rnd, loss, acc, dt, info, dt))
+                if verbose:
+                    print(f"  round {rnd:3d}  loss={loss:.4f} "
+                          f"acc={acc:.4f} ({dt:.2f}s amortized, "
+                          f"pipelined) {info if rnd < 2 else ''}")
+                rnd += 1
+            stop_now = res.stopped
+        elif fused and stop.max_rounds - rnd >= rpd:
             # one dispatch + one log sync for the whole block; leftover
             # rounds (< rpd) fall through to the single-round path below
             # so only one block shape ever compiles

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -39,9 +40,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import ClientHP, Task, make_client_update
-from repro.core.comm import CommMeter
-from repro.core.engine import BatchedRoundEngine, task_uses_conv
-from repro.core.knobs import (DEFAULT_ROUNDS_PER_DISPATCH, ENGINES,
+from repro.core.comm import BlockTiming, CommMeter
+from repro.core.engine import (BatchedRoundEngine, pipeline_blocks,
+                               task_uses_conv)
+from repro.core.knobs import (DEFAULT_PIPELINE_DEPTH,
+                              DEFAULT_ROUNDS_PER_DISPATCH, ENGINES,
+                              parse_pipeline_blocks,
                               parse_rounds_per_dispatch, validate_engine)
 from repro.metaheuristics import REGISTRY, Metaheuristic
 
@@ -66,6 +70,35 @@ def get_strategy(name: str, client_ratio: float = 1.0, **mh_kw) -> Strategy:
     raise KeyError(f"unknown strategy {name!r}")
 
 
+@dataclasses.dataclass
+class PendingBlock:
+    """An in-flight fused block: the stacked round-log device arrays
+    (futures under JAX's async dispatch — touching them is the block's
+    one host sync) plus the host bookkeeping needed to finish it."""
+    n_rounds: int
+    round_offset: int         # server.rounds_completed before the block
+    logs: Any                 # stacked per-round device arrays
+    t_dispatched: float       # perf_counter timestamp at dispatch
+    dispatch_s: float         # host time spent enqueueing the dispatch
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Outcome of :meth:`Server.run_pipelined`.
+
+    ``infos`` covers every round that actually executed — including the
+    rounds of any block that was already in flight when a stopping
+    condition triggered (the one-block overshoot, DESIGN.md §7).
+    ``kept`` counts the leading infos up to and including the block that
+    triggered the stop (``== len(infos)`` when nothing did); drivers
+    trim their logs to ``infos[:kept]`` while the server's device state,
+    round counter, and CommMeter ledger keep the overshoot rounds.
+    """
+    infos: List[dict]
+    kept: int
+    stopped: bool
+
+
 class Server:
     """Orchestrates FL rounds over in-process simulated clients.
 
@@ -83,19 +116,38 @@ class Server:
     round engine is sequential (conv tasks on CPU per the §4 policy —
     there is no batched program to fuse) and to the measured
     ``knobs.DEFAULT_ROUNDS_PER_DISPATCH`` otherwise.
+
+    ``pipeline_blocks``: double-buffer fused block dispatches against
+    the host-side log processing (``run_pipelined``, DESIGN.md §7).
+    "auto" turns the pipeline on exactly when there is a fused batched
+    block to overlap (batched engine, ``rounds_per_dispatch > 1``);
+    "on"/"off" force it (on the sequential engine "on" degrades to the
+    serial block loop — there is no async dispatch to overlap).
     """
 
     def __init__(self, task: Task, strategy: Strategy, hp: ClientHP,
                  client_data: Sequence[Any], rng: jax.Array,
                  model_bytes: Optional[int] = None, engine: str = "auto",
-                 rounds_per_dispatch: Union[int, str] = 1):
+                 rounds_per_dispatch: Union[int, str] = 1,
+                 pipeline_blocks: Union[bool, str] = "auto"):
         validate_engine(engine)
         rpd = parse_rounds_per_dispatch(rounds_per_dispatch)
+        pipe = parse_pipeline_blocks(pipeline_blocks)
         self.task = task
         self.strategy = strategy
         self.hp = hp
         self.client_data = list(client_data)
         self.n_clients = len(client_data)
+        empty = [k for k, d in enumerate(self.client_data)
+                 if any(l.ndim and l.shape[0] == 0
+                        for l in jax.tree.leaves(d))]
+        if empty:
+            raise ValueError(
+                f"client shards {empty} are empty (0 batches) — a client "
+                f"with no data can neither train nor score; extreme "
+                f"Dirichlet skew can starve clients, so drop empty "
+                f"shards or repartition (larger alpha / fewer clients / "
+                f"smaller batch size) before constructing the Server")
         rng, pkey = jax.random.split(rng)
         self.rng = rng
         self.global_params = task.init_params(pkey)
@@ -129,6 +181,12 @@ class Server:
             rpd = (DEFAULT_ROUNDS_PER_DISPATCH
                    if self._engine is not None else 1)
         self.rounds_per_dispatch = rpd
+        # auto: overlap exactly when there is a fused batched block to
+        # overlap; forcing "on" without a batched engine degrades to the
+        # serial block loop inside run_pipelined
+        if pipe is None:
+            pipe = self._engine is not None and rpd > 1
+        self.pipeline_blocks = bool(pipe)
         self.rounds_completed = 0
         self._update = None
         if self._engine is None:
@@ -178,11 +236,48 @@ class Server:
                     info["eval_loss"], info["eval_acc"] = loss, acc
                 infos.append(info)
             return infos
+        return self.finish_block(
+            self.dispatch_block(n_rounds, eval_data, eval_every))
+
+    # --------------------------------------------------------- pipeline --
+    def dispatch_block(self, n_rounds: Optional[int] = None, eval_data=None,
+                       eval_every: int = 1) -> PendingBlock:
+        """Dispatch one fused block WITHOUT fetching its logs.
+
+        JAX dispatch is asynchronous, so the returned
+        :class:`PendingBlock` holds device-array futures; the server's
+        ``global_params`` / ``rng`` / ``rounds_completed`` advance
+        immediately (also as futures), which is what lets the *next*
+        ``dispatch_block`` enqueue before this block's device execution
+        finishes.  Pair with :meth:`finish_block` — in dispatch order —
+        to sync the logs, record the meter, and build the info dicts.
+        Requires the batched engine.
+        """
+        if self._engine is None:
+            raise RuntimeError(
+                "dispatch_block requires the batched engine; the "
+                "sequential fallback has no async block dispatch to "
+                "pipeline — use run_block, which degrades gracefully")
+        n_rounds = int(n_rounds or self.rounds_per_dispatch)
+        t0 = time.perf_counter()
+        offset = self.rounds_completed
         params, rng, logs = self._engine.run_block(
             self.global_params, self.rng, n_rounds, eval_batch=eval_data,
-            eval_every=eval_every, round_offset=self.rounds_completed)
+            eval_every=eval_every, round_offset=offset)
         self.global_params, self.rng = params, rng
         self.rounds_completed += n_rounds
+        return PendingBlock(n_rounds=n_rounds, round_offset=offset,
+                            logs=logs, t_dispatched=t0,
+                            dispatch_s=time.perf_counter() - t0)
+
+    def finish_block(self, pending: PendingBlock) -> List[dict]:
+        """Finish a dispatched block: record its rounds on the meter,
+        sync the stacked logs (the block's one device->host transfer —
+        under the pipeline this host work overlaps the next block's
+        device execution), reconstruct the per-round info dicts, and
+        append a :class:`~repro.core.comm.BlockTiming` to the meter's
+        block ledger."""
+        n_rounds = pending.n_rounds
         if self.strategy.is_fedx:
             self.meter.record_rounds(self.strategy, n_rounds,
                                      fetched_model=True)
@@ -190,19 +285,34 @@ class Server:
             self.meter.record_rounds(
                 self.strategy, n_rounds,
                 n_participants=self._engine.n_participants)
+        t0 = time.perf_counter()
         # the block's single device->host sync
-        out = jax.device_get(logs)
+        out = jax.device_get(pending.logs)
+        t1 = time.perf_counter()
+        infos = self._block_infos(out, n_rounds)
+        t2 = time.perf_counter()
+        self.meter.record_block_timing(BlockTiming(
+            n_rounds=n_rounds, dispatch_s=pending.dispatch_s,
+            sync_s=t1 - t0, process_s=t2 - t1,
+            total_s=t2 - pending.t_dispatched))
+        return infos
+
+    def _block_infos(self, out, n_rounds: int) -> List[dict]:
+        """Host-side reconstruction of ``run_round``-shaped info dicts
+        from a fused block's fetched log arrays."""
         infos = []
         for r in range(n_rounds):
+            scores = out["scores"][r]
             if self.strategy.is_fedx:
-                scores = out["scores"][r]
                 best = int(out["best"][r])
                 info = {"best_client": best, "score": float(scores[best]),
                         "scores": [float(s) for s in scores],
                         "engine": "fused"}
             else:
+                # FedAvg scores align with the participants list
                 info = {"participants": [int(k)
                                          for k in out["participants"][r]],
+                        "scores": [float(s) for s in scores],
                         "engine": "fused"}
             if "eval_loss" in out and not math.isnan(
                     float(out["eval_loss"][r])):
@@ -210,6 +320,63 @@ class Server:
                 info["eval_acc"] = float(out["eval_acc"][r])
             infos.append(info)
         return infos
+
+    def run_pipelined(self, rounds: int, eval_data=None,
+                      eval_every: int = 1,
+                      stop_fn: Optional[Callable[[dict], bool]] = None,
+                      block_rounds: Optional[int] = None,
+                      depth: int = DEFAULT_PIPELINE_DEPTH) -> PipelineResult:
+        """Run ``rounds`` rounds as double-buffered fused blocks.
+
+        Blocks of ``block_rounds`` (default ``rounds_per_dispatch``)
+        rounds are dispatched through :func:`repro.core.engine.
+        pipeline_blocks`: block ``k+1`` is enqueued before block ``k``'s
+        logs are fetched, so the host-side log sync, info
+        reconstruction, CommMeter recording, and ``stop_fn`` checks of
+        block ``k`` overlap block ``k+1``'s device execution.  The
+        result is bit-exact with a serial ``run_block`` loop — the
+        pipeline reorders host work, not device work.
+
+        ``stop_fn(info)`` is called once per finished round, in round
+        order; when it returns True no further block is dispatched, but
+        the block already in flight completes (its rounds execute, its
+        meter entries land) — a worst-case overshoot of ``(depth - 1) *
+        block_rounds`` rounds.  See :class:`PipelineResult` for the
+        trim contract.  A trailing partial block (``rounds`` not a
+        multiple of the block size) compiles a second block shape;
+        drivers that care (``run_federated``) pass a multiple and run
+        leftovers on the single-round path.
+
+        On the sequential engine this degrades to a serial ``run_block``
+        loop: same result shape, no overlap and no overshoot.
+        """
+        rounds = int(rounds)
+        block = int(block_rounds or self.rounds_per_dispatch)
+        sizes = [block] * (rounds // block)
+        if rounds % block:
+            sizes.append(rounds % block)
+        should_stop = None
+        if stop_fn is not None:
+            def should_stop(infos):
+                return any(stop_fn(i) for i in infos)
+        if self._engine is None:
+            infos, stopped = [], False
+            for n in sizes:
+                out = self.run_block(n, eval_data, eval_every)
+                infos.extend(out)
+                if should_stop is not None and should_stop(out):
+                    stopped = True
+                    break
+            return PipelineResult(infos=infos, kept=len(infos),
+                                  stopped=stopped)
+        results, kept_blocks, stopped = pipeline_blocks(
+            lambda n: self.dispatch_block(n, eval_data, eval_every),
+            self.finish_block, sizes, depth=depth,
+            should_stop=should_stop)
+        return PipelineResult(
+            infos=[i for blk in results for i in blk],
+            kept=sum(len(blk) for blk in results[:kept_blocks]),
+            stopped=stopped)
 
     def _run_round_batched(self, sel_key, ckeys) -> dict:
         if self.strategy.is_fedx:
@@ -223,11 +390,15 @@ class Server:
             return {"best_client": best, "score": float(scores[best]),
                     "scores": [float(s) for s in scores],
                     "engine": "batched"}
-        new_params, _, sel = self._engine.fedavg_round(
+        new_params, scores, sel = self._engine.fedavg_round(
             self.global_params, sel_key, ckeys)
         self.global_params = new_params
         self.meter.record_fedavg_round(self._engine.n_participants)
-        return {"participants": [int(k) for k in jax.device_get(sel)],
+        # the round's single device->host sync; scores align with the
+        # participants list (FedX scores cover all clients)
+        sel, scores = jax.device_get((sel, scores))
+        return {"participants": [int(k) for k in sel],
+                "scores": [float(s) for s in scores],
                 "engine": "batched"}
 
     def _run_round_sequential(self, sel_key, ckeys) -> dict:
@@ -251,15 +422,21 @@ class Server:
         # ---- FedAvg ----
         m = max(int(self.strategy.client_ratio * self.n_clients), 1)
         sel = jax.random.choice(sel_key, self.n_clients, (m,), replace=False)
-        new_params = []
+        scores, new_params = [], []
         for k in sel.tolist():
-            _, params = self._update(self.global_params,
-                                     self.client_data[k], ckeys[k])
+            score, params = self._update(self.global_params,
+                                         self.client_data[k], ckeys[k])
+            scores.append(score)
             new_params.append(params)
         self.global_params = jax.tree.map(
             lambda *xs: jnp.mean(jnp.stack(xs), 0), *new_params)
+        # one host sync for the participants' scores, after all have
+        # dispatched; aligned with the participants list
+        scores = np.asarray(jax.device_get(jnp.stack(scores)))
         self.meter.record_fedavg_round(m)
-        return {"participants": sel.tolist(), "engine": "sequential"}
+        return {"participants": sel.tolist(),
+                "scores": [float(s) for s in scores],
+                "engine": "sequential"}
 
     # ------------------------------------------------------------- eval --
     def evaluate(self, eval_data) -> Tuple[float, float]:

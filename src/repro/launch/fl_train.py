@@ -13,6 +13,7 @@ import json
 from repro.core import FLConfig, build_experiment
 from repro.core.api import strategy_names, PARTITIONS, TASKS
 from repro.core.knobs import (validate_engine,
+                              validate_pipeline_blocks,
                               validate_rounds_per_dispatch,
                               validate_vectorize)
 
@@ -56,6 +57,13 @@ def main():
                     help="fuse R rounds into one device dispatch with "
                          "one host sync per block (batched engine only; "
                          "auto = measured default, DESIGN.md §6)")
+    ap.add_argument("--pipeline-blocks", nargs="?", const="on",
+                    default="auto", type=validate_pipeline_blocks,
+                    metavar="auto|on|off",
+                    help="double-buffer fused block dispatches against "
+                         "host-side log processing (DESIGN.md §7); bare "
+                         "flag = on, default auto pipelines whenever "
+                         "rounds-per-dispatch > 1 on the batched engine")
     ap.add_argument("--eval-every", type=int, default=1, metavar="K",
                     help="evaluate the global model every K-th round; "
                          "fused blocks run the cadence on device")
@@ -71,12 +79,14 @@ def main():
         mh_pop=args.pop, mh_generations=args.generations,
         engine=args.engine, vectorize=args.vectorize,
         rounds_per_dispatch=args.rounds_per_dispatch,
+        pipeline_blocks=args.pipeline_blocks,
         eval_every=args.eval_every,
         max_rounds=args.rounds, tau=args.tau)
     exp = build_experiment(cfg)
     print(f"strategy={cfg.strategy} clients={cfg.n_clients} "
           f"partition={cfg.partition} engine={exp.server.engine} "
           f"rounds_per_dispatch={exp.server.rounds_per_dispatch} "
+          f"pipeline_blocks={exp.server.pipeline_blocks} "
           f"model_bytes={exp.meter.model_bytes:,}")
     result = exp.run(verbose=True)
 

@@ -111,3 +111,42 @@ def test_normalized_cost_accepts_meter():
     assert 0.012 < normalized_cost(meter) < 0.0140
     with pytest.raises(TypeError):
         normalized_cost(4)
+
+
+def test_meter_tracks_round_kinds():
+    """Every recording tags the round's strategy kind; the fused block
+    path reconstructs the same kind sequence as single-round calls."""
+    from repro.core.comm import KIND_FEDAVG, KIND_FEDX
+    meter = CommMeter(model_bytes=1000, n_clients=10)
+    meter.record_fedx_round()
+    meter.record_fedavg_round(5)
+    assert meter.kinds == [KIND_FEDX, KIND_FEDAVG]
+    block = CommMeter(model_bytes=1000, n_clients=10)
+    block.record_rounds("fedbwo", 1)
+    block.record_rounds("fedavg", 1, n_participants=5)
+    assert block.kinds == meter.kinds
+
+
+def test_normalized_cost_rejects_mixed_or_fedavg_meter():
+    """Eq. 4's t_x counts FedX rounds only; a meter holding FedAvg
+    rounds must raise instead of silently pricing them at FedX rates."""
+    meter = CommMeter(model_bytes=10**7, n_clients=10)
+    meter.record_fedx_round()
+    meter.record_fedavg_round(5)
+    with pytest.raises(ValueError, match="FedX rounds only"):
+        normalized_cost(meter)
+    pure_avg = CommMeter(model_bytes=10**7, n_clients=10)
+    pure_avg.record_fedavg_round(10)
+    with pytest.raises(ValueError):
+        normalized_cost(pure_avg)
+    # pure-FedX meters keep working unchanged
+    pure_x = CommMeter(model_bytes=10**7, n_clients=10)
+    for _ in range(4):
+        pure_x.record_fedx_round()
+    assert 0.012 < normalized_cost(pure_x) < 0.0140
+
+
+def test_block_timing_summary_empty_meter():
+    meter = CommMeter(model_bytes=1000, n_clients=10)
+    s = meter.timing_summary()
+    assert s["blocks"] == 0 and s["rounds"] == 0

@@ -216,3 +216,28 @@ def test_sequential_run_block_fallback():
     assert len(infos) == 3
     assert [("eval_acc" in i) for i in infos] == [False, True, True]
     assert len(seq.meter.uplink) == 3
+
+
+@pytest.mark.parametrize("ratio", [1.0, 0.6])
+def test_fedavg_scores_parity_across_engines(ratio):
+    """FedAvg infos carry per-participant scores on the sequential,
+    batched single-round, AND fused block paths — the fused engine used
+    to drop them on the host side even though the device computed them."""
+    clients = _clients()
+    seq = Server(make_toy_task(), get_strategy("fedavg", client_ratio=ratio),
+                 _hp(), clients, jax.random.PRNGKey(3), engine="sequential")
+    single = _server("fedavg", clients, client_ratio=ratio)
+    fused = _server("fedavg", clients, rounds_per_dispatch=R,
+                    client_ratio=ratio)
+    infos_seq = [seq.run_round() for _ in range(R)]
+    infos_s = [single.run_round() for _ in range(R)]
+    infos_f = fused.run_block(R)
+    for a, b, c in zip(infos_seq, infos_s, infos_f):
+        assert a["participants"] == b["participants"] == c["participants"]
+        for info in (a, b, c):
+            assert len(info["scores"]) == len(info["participants"])
+            assert all(isinstance(s, float) for s in info["scores"])
+        # batched single-round and fused are the same device program ->
+        # bit-exact; sequential differs only by reduction order
+        assert b["scores"] == c["scores"]
+        np.testing.assert_allclose(a["scores"], b["scores"], rtol=1e-5)
