@@ -13,12 +13,13 @@ from repro.core.engine import (BatchedRoundEngine, make_batched_fedavg_round,
                                make_batched_fedx_round, make_fused_rounds,
                                pipeline_blocks, resolve_vectorize,
                                stack_clients)
-from repro.core.knobs import (DEFAULT_PIPELINE_DEPTH,
+from repro.core.knobs import (AUDIT_MODES, DEFAULT_PIPELINE_DEPTH,
                               DEFAULT_ROUNDS_PER_DISPATCH, ENGINES,
                               PIPELINE_MODES, VECTORIZE_MODES,
-                              parse_pipeline_blocks,
+                              parse_audit, parse_pipeline_blocks,
                               parse_rounds_per_dispatch,
-                              parse_vectorize, validate_engine,
+                              parse_vectorize, validate_audit,
+                              validate_engine,
                               validate_pipeline_blocks,
                               validate_rounds_per_dispatch,
                               validate_vectorize)
@@ -27,6 +28,9 @@ from repro.core.server import (PendingBlock, PipelineResult, Server,
                                Strategy, get_strategy)
 from repro.core.api import (Experiment, ExperimentResult, FLConfig,
                             build_experiment)
+# the error the opt-in flcheck hook (build_experiment(..., audit=True))
+# raises; re-exported so callers need not import repro.analysis directly
+from repro.analysis.report import AuditError
 
 __all__ = ["ClientHP", "Task", "make_client_update", "BlockTiming",
            "CommMeter",
@@ -35,12 +39,14 @@ __all__ = ["ClientHP", "Task", "make_client_update", "BlockTiming",
            "make_batched_fedx_round", "make_fused_rounds",
            "pipeline_blocks", "resolve_vectorize", "stack_clients",
            "DEFAULT_PIPELINE_DEPTH", "DEFAULT_ROUNDS_PER_DISPATCH",
-           "ENGINES", "PIPELINE_MODES", "VECTORIZE_MODES",
-           "parse_pipeline_blocks", "parse_rounds_per_dispatch",
-           "parse_vectorize", "validate_engine",
+           "AUDIT_MODES", "ENGINES", "PIPELINE_MODES", "VECTORIZE_MODES",
+           "parse_audit", "parse_pipeline_blocks",
+           "parse_rounds_per_dispatch",
+           "parse_vectorize", "validate_audit", "validate_engine",
            "validate_pipeline_blocks", "validate_rounds_per_dispatch",
            "validate_vectorize",
            "RoundLog", "StopConditions", "run_federated",
            "PendingBlock", "PipelineResult", "Server", "Strategy",
            "get_strategy",
-           "Experiment", "ExperimentResult", "FLConfig", "build_experiment"]
+           "Experiment", "ExperimentResult", "FLConfig", "build_experiment",
+           "AuditError"]

@@ -25,7 +25,7 @@ import jax
 
 from repro.core.client import ClientHP, Task
 from repro.core.comm import fedavg_total, normalized_cost
-from repro.core.knobs import (validate_engine,
+from repro.core.knobs import (parse_audit, validate_engine,
                               validate_pipeline_blocks,
                               validate_rounds_per_dispatch,
                               validate_vectorize)
@@ -121,7 +121,8 @@ class FLConfig:
 def build_experiment(cfg: FLConfig, *, task: Optional[Task] = None,
                      client_data: Optional[list] = None,
                      eval_data: Any = None,
-                     hp: Optional[ClientHP] = None) -> "Experiment":
+                     hp: Optional[ClientHP] = None,
+                     audit: Any = "off") -> "Experiment":
     """Materialize an :class:`Experiment` from a config: synthesize the
     dataset, partition and batch it across clients, and construct the
     ``Server`` (which picks the round engine per ``cfg.engine``).
@@ -129,6 +130,13 @@ def build_experiment(cfg: FLConfig, *, task: Optional[Task] = None,
     Any of ``task`` / ``client_data`` / ``eval_data`` / ``hp`` may be
     passed to override the config-derived default — benchmarks use this
     to share one dataset across strategy sweeps.
+
+    ``audit`` opts the build into the flcheck static auditor
+    (``repro.analysis``, knobs.AUDIT_MODES): ``"report"`` runs the rule
+    catalogue over the engine-built round programs and prints the
+    findings; ``"strict"`` (or ``audit=True``) additionally raises
+    :class:`repro.analysis.AuditError` on any error-severity finding,
+    so a contract regression fails the build before any round runs.
     """
     # local imports: repro.data modules import repro.core.client, so a
     # module-level import here would cycle through the package inits
@@ -159,8 +167,16 @@ def build_experiment(cfg: FLConfig, *, task: Optional[Task] = None,
                     engine=cfg.engine,
                     rounds_per_dispatch=cfg.rounds_per_dispatch,
                     pipeline_blocks=cfg.pipeline_blocks)
-    return Experiment(cfg=cfg, server=server, eval_data=eval_data,
-                      stop=cfg.stop_conditions())
+    experiment = Experiment(cfg=cfg, server=server, eval_data=eval_data,
+                            stop=cfg.stop_conditions())
+    mode = parse_audit(audit)
+    if mode != "off":
+        # local import: repro.analysis.audit imports this module's
+        # collaborators from repro.core, so the hook resolves lazily
+        from repro.analysis.audit import audit_experiment
+        report = audit_experiment(experiment, strict=(mode == "strict"))
+        print(report.render())
+    return experiment
 
 
 @dataclasses.dataclass

@@ -48,6 +48,8 @@ from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis.walker import (CONV_PRIMITIVES, jaxpr_has_primitive,
+                                   loss_uses_conv)
 from repro.core.client import ClientHP, Task, make_client_update
 from repro.core.knobs import VECTORIZE_MODES, parse_vectorize
 from repro.metaheuristics import Metaheuristic
@@ -90,24 +92,13 @@ def _scan_unroll(vectorize: str, mode: str, n: int) -> int:
     return n if mode == "unroll" else max(1, min(chunk, max(n, 1)))
 
 
-_CONV_PRIMITIVES = ("conv_general_dilated",)
+_CONV_PRIMITIVES = CONV_PRIMITIVES
 
-
-def _jaxpr_has_primitive(jaxpr, names) -> bool:
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in names:
-            return True
-        for val in eqn.params.values():
-            subs = val if isinstance(val, (tuple, list)) else (val,)
-            for sub in subs:
-                closed = getattr(sub, "jaxpr", None)
-                if closed is not None and hasattr(closed, "eqns"):
-                    if _jaxpr_has_primitive(closed, names):
-                        return True
-                elif hasattr(sub, "eqns"):
-                    if _jaxpr_has_primitive(sub, names):
-                        return True
-    return False
+# One walker, two callers (DESIGN.md §8): the recursive jaxpr traversal
+# used here for the conv-on-CPU auto policy is the same one flcheck's
+# rules run over full round programs — re-exported so existing engine
+# call sites keep working.
+_jaxpr_has_primitive = jaxpr_has_primitive
 
 
 def task_uses_conv(task: Task, params, sample_batch) -> bool:
@@ -117,13 +108,10 @@ def task_uses_conv(task: Task, params, sample_batch) -> bool:
     under vmap, no fast conv thunk in loop bodies, and measured ~1.5x
     slower even fully unrolled) than as per-client dispatches, so conv
     tasks stay on the sequential engine on CPU.  Returns True (the
-    conservative answer) when the trace fails.
+    conservative answer) when the trace fails.  Thin wrapper over
+    :func:`repro.analysis.walker.loss_uses_conv` (the shared walker).
     """
-    try:
-        jaxpr = jax.make_jaxpr(task.loss_fn)(params, sample_batch)
-        return _jaxpr_has_primitive(jaxpr.jaxpr, _CONV_PRIMITIVES)
-    except Exception:
-        return True
+    return loss_uses_conv(task.loss_fn, params, sample_batch)
 
 
 def stack_clients(client_data: Sequence[Any], pad: bool = False):

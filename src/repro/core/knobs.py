@@ -87,6 +87,32 @@ def validate_rounds_per_dispatch(spec):
     return spec
 
 
+# flcheck audit hook vocabulary (DESIGN.md §8): "off" skips the audit,
+# "report" runs it and prints findings without gating, "strict" raises
+# repro.analysis.AuditError on any error-severity finding.
+AUDIT_MODES = ("off", "report", "strict")
+
+
+def parse_audit(spec: Union[bool, str, None]) -> str:
+    """``None``/``False``/``"off"`` -> ``"off"``; ``True`` ->
+    ``"strict"`` (the boolean opt-in gates); else one of
+    :data:`AUDIT_MODES`."""
+    if spec is None:
+        return "off"
+    if isinstance(spec, bool):
+        return "strict" if spec else "off"
+    low = str(spec).lower()
+    if low in AUDIT_MODES:
+        return low
+    raise ValueError(
+        f"audit={spec!r} must be one of {AUDIT_MODES} (or a bool)")
+
+
+def validate_audit(spec):
+    parse_audit(spec)
+    return spec
+
+
 def validate_engine(name: str) -> str:
     if name not in ENGINES:
         raise ValueError(f"engine={name!r} not in {ENGINES}")

@@ -440,5 +440,9 @@ class Server:
 
     # ------------------------------------------------------------- eval --
     def evaluate(self, eval_data) -> Tuple[float, float]:
-        loss, acc = self._eval(self.global_params, eval_data)
+        # one device_get for both scalars: float(loss), float(acc) on the
+        # device arrays would block on the device twice (flcheck's
+        # paired-host-conversions lint — the first audit's finding)
+        loss, acc = jax.device_get(self._eval(self.global_params,
+                                              eval_data))
         return float(loss), float(acc)

@@ -144,6 +144,8 @@ def lower_combo(arch_name: str, shape_name: str, *, multi_pod: bool = False,
             "xla_bytes_uncorrected": float(cost.get("bytes accessed", 0.0)),
             "n_dots": hc.n_dots, "n_collectives": hc.n_collectives,
             "analysis_flags": hc.flagged,
+            "host_transfers": hc.host_transfers,
+            "n_host_transfers": hc.n_host_transfers,
         },
         "collectives": {"link_bytes_per_chip": coll_per_chip,
                         "cross_pod_link_bytes": hc.cross_pod_link_bytes,
@@ -240,7 +242,9 @@ def lower_fedx_round(arch_name: str, local_steps: int = 8) -> dict:
         "mode": f"fedx_round(local_steps={local_steps})",
         "compile_s": round(t_compile, 2),
         "cost": {"flops_per_device": hc.dot_flops,
-                 "hbm_bytes_per_device": hc.hbm_bytes},
+                 "hbm_bytes_per_device": hc.hbm_bytes,
+                 "host_transfers": hc.host_transfers,
+                 "n_host_transfers": hc.n_host_transfers},
         "collectives": {"link_bytes_per_chip": hc.collective_link_bytes,
                         "cross_pod_link_bytes": hc.cross_pod_link_bytes,
                         "by_kind": hc.collectives_by_kind,

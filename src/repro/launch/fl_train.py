@@ -12,7 +12,8 @@ import json
 
 from repro.core import FLConfig, build_experiment
 from repro.core.api import strategy_names, PARTITIONS, TASKS
-from repro.core.knobs import (validate_engine,
+from repro.core.knobs import (AUDIT_MODES, validate_audit,
+                              validate_engine,
                               validate_pipeline_blocks,
                               validate_rounds_per_dispatch,
                               validate_vectorize)
@@ -67,6 +68,13 @@ def main():
     ap.add_argument("--eval-every", type=int, default=1, metavar="K",
                     help="evaluate the global model every K-th round; "
                          "fused blocks run the cadence on device")
+    ap.add_argument("--audit", nargs="?", const="strict", default="off",
+                    type=validate_audit, metavar="|".join(AUDIT_MODES),
+                    help="run the flcheck static auditor "
+                         "(repro.analysis) over the engine-built round "
+                         "programs before training; bare flag = strict "
+                         "(abort on error-severity findings), 'report' "
+                         "prints findings without gating")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -82,7 +90,7 @@ def main():
         pipeline_blocks=args.pipeline_blocks,
         eval_every=args.eval_every,
         max_rounds=args.rounds, tau=args.tau)
-    exp = build_experiment(cfg)
+    exp = build_experiment(cfg, audit=args.audit)
     print(f"strategy={cfg.strategy} clients={cfg.n_clients} "
           f"partition={cfg.partition} engine={exp.server.engine} "
           f"rounds_per_dispatch={exp.server.rounds_per_dispatch} "

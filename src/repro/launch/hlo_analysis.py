@@ -12,6 +12,12 @@ per-device estimates:
                      (fusion-aware: internal fusion ops don't touch HBM),
                      skipping no-traffic ops (tuple/GTE/bitcast/...).
 - ``collectives``:   ring-cost link bytes per chip, loop-corrected.
+- ``host transfers``: device<->host-shaped ops (outfeed/infeed,
+                     send/recv, copy-start/copy-done, host-callback
+                     custom-calls) counted per computation and
+                     loop-corrected — shared by the roofline JSON and
+                     flcheck's ``one-sync-per-block`` rule
+                     (repro.analysis.rules).
 
 Multipliers propagate through the call graph: a computation called from
 a while body inherits caller_multiplier x trip_count; fusions inherit
@@ -36,6 +42,15 @@ _NO_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "constant",
 
 _COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+# Ops that move data across the device<->host boundary (or stage an
+# async copy that may).  A host *callback* hides behind a custom-call;
+# _CALLBACK_TARGET matches the XLA FFI/python-callback target names.
+_HOST_TRANSFER_OPS = ("outfeed", "infeed", "send", "recv", "send-done",
+                      "recv-done", "copy-start", "copy-done")
+_CALLBACK_TARGET = re.compile(
+    r'custom_call_target="([^"]*(?:callback|host|outfeed|infeed)[^"]*)"',
+    re.IGNORECASE)
 
 _SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
@@ -245,6 +260,90 @@ class HloCost:
     top_collectives: List[dict] = dataclasses.field(default_factory=list)
     top_dots: List[dict] = dataclasses.field(default_factory=list)
     cross_pod_link_bytes: float = 0.0
+    # device<->host-shaped op executions per dispatch (loop-corrected),
+    # by kind; raw instruction count in n_host_transfers
+    host_transfers: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    n_host_transfers: int = 0
+
+
+def _host_transfer_kind(ins: Instr) -> Optional[str]:
+    """The host-transfer kind of an instruction, or None.
+
+    Explicit transfer ops keep their HLO opcode; host callbacks (which
+    XLA lowers to ``custom-call`` with an FFI/python-callback target)
+    are reported as ``"host-callback"``.
+    """
+    if ins.op in _HOST_TRANSFER_OPS:
+        return ins.op
+    if ins.op == "custom-call" and _CALLBACK_TARGET.search(ins.line):
+        return "host-callback"
+    return None
+
+
+def host_transfer_counts(
+        comps: Dict[str, Computation]) -> Dict[str, Dict[str, int]]:
+    """Raw host-transfer-shaped op counts per computation:
+    ``{computation: {kind: count}}`` (computations with none omitted).
+    """
+    out: Dict[str, Dict[str, int]] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            kind = _host_transfer_kind(ins)
+            if kind is None:
+                continue
+            out.setdefault(comp.name, {})
+            out[comp.name][kind] = out[comp.name].get(kind, 0) + 1
+    return out
+
+
+def count_host_transfers(hlo: str,
+                         loop_corrected: bool = True) -> Dict[str, float]:
+    """Total host-transfer-shaped op executions per dispatch, by kind.
+
+    With ``loop_corrected=True`` each op is weighted by its
+    computation's execution-count multiplier (a transfer inside a
+    trip-count-100 while body counts 100x) — the quantity flcheck's
+    ``one-sync-per-block`` rule bounds.
+    """
+    comps = parse_module(hlo)
+    mult = _multipliers(comps) if loop_corrected else {}
+    totals: Dict[str, float] = {}
+    for comp in comps.values():
+        m = mult.get(comp.name, 1.0) or 1.0
+        for ins in comp.instrs:
+            kind = _host_transfer_kind(ins)
+            if kind is not None:
+                totals[kind] = totals.get(kind, 0.0) + m
+    return totals
+
+
+# one nesting level: the block is "{ {out}: (param, {idx}, kind), ... }"
+_ALIAS_BLOCK = re.compile(
+    r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}", re.DOTALL)
+_ALIAS_ENTRY = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\}(?:,\s*([\w-]+))?\)")
+
+
+def parse_input_output_aliases(
+        hlo: str) -> List[Tuple[Tuple[int, ...], int, Tuple[int, ...]]]:
+    """Input-output aliasing pairs from an HLO module header:
+    ``[(output_index, parameter_number, parameter_index), ...]``.
+
+    An empty list means the compiled program aliases nothing — i.e. any
+    ``donate_argnums`` the caller passed was dropped.  flcheck's
+    ``donation-honored`` rule compares this against the round engine's
+    expected donation set.
+    """
+    m = _ALIAS_BLOCK.search(hlo)
+    if not m:
+        return []
+
+    def idx(s: str) -> Tuple[int, ...]:
+        return tuple(int(x) for x in s.split(",") if x.strip())
+
+    return [(idx(e.group(1)), int(e.group(2)), idx(e.group(3)))
+            for e in _ALIAS_ENTRY.finditer(m.group(1))]
 
 
 def _inline_comps(comps: Dict[str, Computation]) -> set:
@@ -284,6 +383,8 @@ def analyze(hlo: str, total_devices: int,
     n_dots = n_coll = 0
     coll_items: List[dict] = []
     dot_items: List[dict] = []
+    host_xfers: Dict[str, float] = {}
+    n_host = 0
 
     for comp in comps.values():
         m = mult.get(comp.name, 0.0)
@@ -373,6 +474,11 @@ def analyze(hlo: str, total_devices: int,
                                    "shape": ins.shape[:120],
                                    "comp": comp.name,
                                    "meta": _metadata_name(ins.line)})
+            # ---- host transfers (shared with flcheck, DESIGN.md §8) --
+            kind = _host_transfer_kind(ins)
+            if kind is not None:
+                host_xfers[kind] = host_xfers.get(kind, 0.0) + m
+                n_host += 1
             # ---- HBM traffic: top-level (non-fusion-internal) ops ----
             if not fusion_comp and ins.op not in _NO_TRAFFIC:
                 b = shape_bytes(ins.shape)
@@ -388,7 +494,8 @@ def analyze(hlo: str, total_devices: int,
                    collectives_by_kind=coll, n_dots=n_dots,
                    n_collectives=n_coll, flagged=flagged[:20],
                    top_collectives=coll_items[:12], top_dots=dot_items[:12],
-                   cross_pod_link_bytes=cross_pod)
+                   cross_pod_link_bytes=cross_pod,
+                   host_transfers=host_xfers, n_host_transfers=n_host)
 
 
 def _metadata_name(line: str) -> str:
